@@ -1,0 +1,49 @@
+"""Paper Fig. 6/8/9 (less-trusted server): DDG baseline vs aggregate
+Gaussian — MSE at matched privacy AND bits per client.
+
+Setup mirrors the paper at reduced scale: n=500, d=75 (padded to 128 for
+the Hadamard rotation), data on the l2 sphere of radius c=10,
+delta=1e-5.  Claims to reproduce: DDG needs many more bits (up to ~18)
+to match the Gaussian-mechanism utility that aggregate Gaussian attains
+at ~2.5 Elias bits — while both remain SecAgg-compatible.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ddg import DDGMechanism
+from repro.core.mechanisms import get_mechanism
+from repro.core.privacy import gaussian_sigma
+
+
+def run(csv, runs: int = 5):
+    n, d, delta, c = 500, 75, 1e-5, 10.0
+    for eps in (1.0, 4.0, 10.0):
+        # mean-estimation sensitivity: one client change moves the mean by
+        # 2c/n; calibrate sigma for the *mean* estimate.
+        sigma = gaussian_sigma(eps, delta, 2.0 * c / n)
+        key = jax.random.PRNGKey(int(eps * 7))
+        xs = jax.random.normal(key, (n, d))
+        xs = c * xs / jnp.linalg.norm(xs, axis=1, keepdims=True)
+        true_mean = np.asarray(xs.mean(0))
+
+        agg = get_mechanism("aggregate_gaussian", n, sigma)
+        mses, bits = [], []
+        for r in range(runs):
+            y, b = agg.run(jax.random.fold_in(key, r), xs)
+            mses.append(float(np.mean((np.asarray(y) - true_mean) ** 2)))
+            bits.append(b)
+        csv(f"fig6/agg_gauss_eps{eps:g}", float(np.mean(mses)),
+            f"bits={np.mean(bits):.2f};sigma={sigma:.5f}")
+
+        for b in (6, 10, 14, 18):
+            ddg = DDGMechanism(n, sigma_total=sigma, clip=c, bits=b)
+            dm = []
+            for r in range(runs):
+                y, _ = ddg.run(r, np.asarray(xs))
+                dm.append(float(np.mean((y - true_mean) ** 2)))
+            csv(f"fig6/ddg_b{b}_eps{eps:g}", float(np.mean(dm)), f"bits={b}")

@@ -1,0 +1,56 @@
+"""Roofline table: per (arch x shape) cell, the three terms
+
+    compute    = exec_FLOPs   / (chip peak 197 TF/s bf16)
+    memory     = HBM bytes    / (819 GB/s)
+    collective = coll. bytes  / (50 GB/s/link)
+
+from the analytic per-chip models (benchmarks/analytic.py — loop-aware,
+unlike cost_analysis; see EXPERIMENTS.md §Dry-run) cross-checked against
+the dry-run JSON artifacts (collective op classes/counts parsed from the
+compiled HLO).  Emits one row per cell + the dominant bottleneck +
+MODEL_FLOPS / exec_FLOPs (useful-compute fraction).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro import configs
+
+from benchmarks import analytic
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _dryrun_record(arch, shape, multi_pod=False):
+    suffix = "_mp" if multi_pod else ""
+    path = os.path.join(ART, f"{arch}_{shape}{suffix}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def run(csv):
+    for arch, shape, skip in configs.cells():
+        m = analytic.cell_model(arch, shape)
+        rec = _dryrun_record(arch, shape) or {}
+        parsed = rec.get("collective_counts", {})
+        n_coll = sum(parsed.values()) if parsed else -1
+        bottleneck = m.bottleneck
+        total = max(m.compute_s, m.memory_s, m.collective_s)
+        frac = {
+            "compute": m.compute_s,
+            "memory": m.memory_s,
+            "collective": m.collective_s,
+        }[bottleneck] / max(sum([m.compute_s, m.memory_s, m.collective_s]), 1e-30)
+        csv(
+            f"roofline/{arch}_{shape}_compute_s", m.compute_s,
+            f"bottleneck={bottleneck}",
+        )
+        csv(f"roofline/{arch}_{shape}_memory_s", m.memory_s,
+            f"hlo_collective_ops={n_coll}")
+        csv(
+            f"roofline/{arch}_{shape}_collective_s", m.collective_s,
+            f"useful_frac={m.useful_fraction:.3f}",
+        )

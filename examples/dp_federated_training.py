@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param qwen-family model for a few
+hundred steps with DP compressed aggregation (the paper's technique as a
+first-class training feature).
+
+Run:  PYTHONPATH=src python examples/dp_federated_training.py \
+          [--steps 300] [--mechanism aggregate_gaussian] [--arch qwen1.5-0.5b]
+
+On this CPU container the default config is a width-reduced (~100M)
+variant of qwen1.5; on a TPU mesh the same script scales via --mesh.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import checkpoint
+from repro.core.privacy import gaussian_epsilon
+from repro.data import synthetic
+from repro.dist import meshctx
+from repro.dist.compress import CompressionConfig, message_bits
+from repro.train import steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--mechanism", default="aggregate_gaussian")
+    ap.add_argument("--sigma", type=float, default=1e-4)
+    ap.add_argument("--clip", type=float, default=0.5)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="artifacts/ckpt_example")
+    args = ap.parse_args()
+
+    # ~100M config: qwen1.5-0.5b family at 12 layers / d=768
+    cfg = configs.get_config(args.arch).scaled(
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=2048,
+        compute_dtype="float32", remat="none", q_chunk=128, kv_chunk=128,
+    )
+    print(f"{cfg.name}: ~{cfg.param_count()/1e6:.0f}M params")
+
+    mesh = meshctx.default_mesh()
+    meshctx.set_mesh(mesh)
+    comp = None
+    if args.mechanism != "none":
+        comp = CompressionConfig(
+            mechanism=args.mechanism, sigma=args.sigma, clip=args.clip
+        )
+        print(f"compression: {args.mechanism}, sigma={args.sigma}, "
+              f"<= {message_bits(comp, 1):.1f} bits/coordinate on the wire")
+    tc = steps.TrainConfig(optimizer="adamw", lr=args.lr, grad_accum=2,
+                           compression=comp)
+
+    start = checkpoint.latest_step(args.ckpt)
+    state = steps.init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    if start is not None:
+        print(f"resuming from checkpoint step {start}")
+        state = checkpoint.restore(args.ckpt, start, state)
+    step_fn = jax.jit(steps.build_train_step(cfg, tc, mesh))
+    dc = synthetic.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                              global_batch=args.batch)
+
+    t0 = time.time()
+    first = int(state["step"])
+    for i in range(first, first + args.steps):
+        batch = synthetic.lm_batch(dc, i)
+        state, m = step_fn(state, batch, jnp.int32(i))
+        if i % 20 == 0 or i == first + args.steps - 1:
+            tok_s = (i - first + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  ({tok_s:,.0f} tok/s)")
+        if (i + 1) % 100 == 0:
+            checkpoint.save(args.ckpt, i + 1, state)
+    if comp is not None:
+        eps = gaussian_epsilon(args.sigma, 1e-5, sensitivity=2 * args.clip)
+        print(f"per-step DP (trusted server, no amplification): "
+              f"eps={eps:.1f} @ delta=1e-5 — tune sigma/clip for your budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: distributed mean estimation with exact error distribution.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_mechanism
+from repro.core.privacy import gaussian_epsilon
+
+n_clients, d, sigma = 64, 10_000, 0.05
+key = jax.random.PRNGKey(0)
+xs = jax.random.uniform(key, (n_clients, d), minval=-1, maxval=1)  # client data
+true_mean = xs.mean(0)
+
+print(f"{n_clients} clients, d={d}, target noise sigma={sigma}")
+print(f"{'mechanism':24s} {'MSE':>10s} {'bits/coord':>10s} {'homomorphic':>12s}")
+for name in ["none", "irwin_hall", "individual_direct", "individual_shifted",
+             "aggregate_gaussian", "sigm"]:
+    kw = {"gamma": 0.5} if name == "sigm" else {}
+    mech = get_mechanism(name, n_clients, sigma, **kw)
+    y, bits = mech.run(jax.random.fold_in(key, 1), xs)
+    mse = float(jnp.mean((y - true_mean) ** 2))
+    print(f"{name:24s} {mse:10.6f} {bits:10.2f} {str(mech.homomorphic):>12s}")
+
+eps = gaussian_epsilon(sigma, delta=1e-5, sensitivity=2.0 / n_clients)
+print(f"\nWith exactly-Gaussian mechanisms the estimate is "
+      f"({eps:.2f}, 1e-5)-DP — no extra noise on top of compression.")

@@ -1,0 +1,64 @@
+"""Compression as randomized smoothing (paper App. D): compressing the
+model parameters with an exact-Gaussian-error quantizer IS the smoothing
+perturbation of Duchi et al. / Scaman et al. — downlink compression for
+free in non-smooth distributed optimization.
+
+Problem: min_theta f(theta) = (1/n) sum_i |a_i^T theta - b_i|  (L1
+regression, non-smooth).  We compare subgradient descent on f vs the
+DRS-style update where each client evaluates subgradients at
+E(theta) = theta + sigma*xi produced by the shifted layered quantizer.
+
+Run:  PYTHONPATH=src python examples/randomized_smoothing.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import Gaussian
+from repro.core.layered import LayeredQuantizer
+
+
+def main():
+    n, d, m_dirs = 40, 60, 8
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (n, d))
+    theta_true = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    b = A @ theta_true
+
+    def subgrad(theta):
+        r = A @ theta - b
+        return A.T @ jnp.sign(r) / n
+
+    def f(theta):
+        return jnp.mean(jnp.abs(A @ theta - b))
+
+    sigma, lr, steps = 0.02, 0.05, 400
+    q = LayeredQuantizer(Gaussian(sigma), shifted=True)
+
+    # plain subgradient descent
+    theta = jnp.zeros(d)
+    for t in range(steps):
+        theta = theta - lr / jnp.sqrt(t + 1.0) * subgrad(theta)
+    plain = float(f(theta))
+
+    # smoothing-by-compression: subgradients at m compressed copies of
+    # theta; the compression error xi ~ N(0, sigma^2 I) exactly.
+    theta = jnp.zeros(d)
+    for t in range(steps):
+        g = jnp.zeros(d)
+        for j in range(m_dirs):
+            k = jax.random.fold_in(jax.random.fold_in(key, t), j)
+            rand = q.randomness(k, (d,))
+            theta_hat = q.decode(q.encode(theta, rand), rand)  # = theta + sigma*xi
+            g = g + subgrad(theta_hat)
+        theta = theta - lr / jnp.sqrt(t + 1.0) * (g / m_dirs)
+    smoothed = float(f(theta))
+
+    print(f"L1 regression, {steps} steps:")
+    print(f"  plain subgradient:            f = {plain:.5f}")
+    print(f"  smoothing-by-compression:     f = {smoothed:.5f}")
+    print("  (the downlink model broadcast was also quantized — for free)")
+    assert smoothed < plain * 1.5
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Core library: AINQ mechanisms with exact error distribution.
+
+The paper's contribution as composable JAX modules — see DESIGN.md §1.
+"""
+from repro.core.aggregate import AggregateGaussianMechanism
+from repro.core.distributions import Gaussian, Laplace
+from repro.core.irwin_hall import IrwinHallMechanism, NormalizedIrwinHall
+from repro.core.layered import LayeredQuantizer
+from repro.core.mechanisms import MECHANISMS, get_mechanism
+from repro.core.sigm import SIGM
+
+__all__ = [
+    "AggregateGaussianMechanism",
+    "Gaussian",
+    "Laplace",
+    "IrwinHallMechanism",
+    "NormalizedIrwinHall",
+    "LayeredQuantizer",
+    "MECHANISMS",
+    "get_mechanism",
+    "SIGM",
+]

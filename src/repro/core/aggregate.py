@@ -1,0 +1,94 @@
+"""Aggregate Q mechanism (paper Def. 8) with Q = Gaussian (Sec. 4.4).
+
+Homomorphic AND exactly Gaussian: global shared randomness T = (A, B)
+is drawn by DECOMPOSE, then every client runs subtractive dithering with
+step A*w (w = 2 sigma sqrt(3n)); the server decodes the *sum* of the
+integer descriptions:
+
+    M_i = round(x_i / (A w) + S_i)
+    Y   = (A w / n) (sum_i M_i - sum_i S_i) + B sigma
+    Y - mean(x)  ~  N(0, sigma^2)       (exactly; Prop. 3)
+
+Two vectorization modes over R^d (DESIGN.md "assumptions changed"):
+  * per_coord=True  : one (A, B) per coordinate (paper-faithful i.i.d.
+                      noise; required for DP).
+  * per_coord=False : one (A, B) per tensor; each coordinate's marginal
+                      noise is still exactly N(0, sigma^2) but
+                      coordinates are dependent. Cheaper shared RNG.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dither
+from repro.core.decompose import DecomposeTables, decompose_gaussian, gaussian_tables
+
+__all__ = ["AggregateGaussianMechanism", "AggGaussShared"]
+
+
+class AggGaussShared(NamedTuple):
+    """Global shared randomness T = (A, B) (scalar or per-coordinate)."""
+
+    A: jnp.ndarray
+    B: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregateGaussianMechanism:
+    """Aggregate AINQ mechanism with noise exactly N(0, sigma^2)."""
+
+    n: int
+    sigma: float
+    per_coord: bool = True
+
+    homomorphic = True
+    exact_gaussian = True
+    name = "aggregate_gaussian"
+
+    @property
+    def w(self) -> float:
+        return 2.0 * self.sigma * math.sqrt(3.0 * self.n)
+
+    @property
+    def tables(self) -> DecomposeTables:
+        return gaussian_tables(self.n)
+
+    # --- shared randomness -----------------------------------------------
+    def global_randomness(self, key, shape=()) -> AggGaussShared:
+        """T = (A, B); every client and the server derive this from the
+        common seed (replicated computation in SPMD)."""
+        tables = self.tables
+        if self.per_coord and shape:
+            flat = int(jnp.prod(jnp.asarray(shape)))
+            keys = jax.random.split(key, flat)
+            A, B = jax.vmap(lambda k: decompose_gaussian(tables, k))(keys)
+            return AggGaussShared(A.reshape(shape), B.reshape(shape))
+        A, B = decompose_gaussian(tables, key)
+        return AggGaussShared(
+            jnp.broadcast_to(A, shape), jnp.broadcast_to(B, shape)
+        )
+
+    def client_randomness(self, key, shape=(), dtype=jnp.float32):
+        """S_i ~ U(-1/2,1/2) per coordinate; key = fold_in(round_key, i)."""
+        return dither.dither_noise(key, shape, dtype)
+
+    # --- encode / decode ---------------------------------------------------
+    def encode(self, x_i, s_i, t: AggGaussShared):
+        return dither.dither_encode(x_i, t.A * self.w, s_i)
+
+    def decode_sum(self, m_sum, s_sum, t: AggGaussShared, *, dtype=jnp.float32):
+        step = (t.A * self.w / self.n).astype(dtype)
+        return (m_sum.astype(dtype) - s_sum.astype(dtype)) * step + (
+            t.B * self.sigma
+        ).astype(dtype)
+
+    # --- communication accounting -------------------------------------------
+    def bits_fixed_given_A(self, t_range: float, A) -> jnp.ndarray:
+        """ceil(log2(t/(w A) + 3)) bits per coordinate, conditional on A
+        (Sec. 4.5), for inputs |x_i| <= t_range/2."""
+        return jnp.ceil(jnp.log2(t_range / (self.w * jnp.abs(A)) + 3.0))

@@ -1,0 +1,239 @@
+"""DECOMPOSEUNIF / DECOMPOSE (paper Algorithms 1-2, Appendix A.2/A.4).
+
+Given the Irwin-Hall noise P that the homomorphic dithering fleet
+produces, these algorithms draw (A, B) from a coupling in Pi_{A,B}(P, Q)
+so that  A * Z + B ~ Q  for Z ~ P (unit-variance Irwin-Hall here,
+Q = N(0,1)).  The aggregate Q mechanism then runs the Irwin-Hall
+mechanism with step scaled by A and output shifted by B.
+
+Implementation notes (see DESIGN.md "hardware adaptation"):
+  * both algorithms are rejection loops with O(sqrt(n)) expected
+    iterations; we implement them as ``lax.while_loop``s so they jit
+    and vmap (per-coordinate mode) cleanly;
+  * the Irwin-Hall pdf / derivative / inverse come from the float64 FFT
+    grids in ``irwin_hall.py``;
+  * Algorithm 1 as printed omits the scale update ``a <- a (1/2 - s)``
+    (the recursion re-expresses U(s, 1/2) as an affine image of
+    U(-1/2, 1/2)); Algorithm 2 line 9 normalizes f to [-1/2, 1/2],
+    which for a density is  f~(x) = L f(L x).  Both fixed here and
+    verified by distribution tests (A Z + B ~ Q, KS).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.irwin_hall import NormalizedIrwinHall
+
+__all__ = [
+    "gaussian_ih_lambda",
+    "laplace_ih_lambda",
+    "decompose_unif",
+    "decompose_gaussian",
+    "DecomposeTables",
+    "gaussian_tables",
+    "laplace_tables",
+]
+
+_MAX_ITERS = 100_000  # hard cap; P(hit) ~ (1 - 1/f(0))^cap, astronomically small
+
+
+def _norm_pdf64(x):
+    return np.exp(-0.5 * x * x) / math.sqrt(2.0 * math.pi)
+
+
+def _laplace_pdf64(x):
+    # unit-variance Laplace: b = 1/sqrt(2)
+    b = 1.0 / math.sqrt(2.0)
+    return np.exp(-np.abs(x) / b) / (2.0 * b)
+
+
+_TARGET_PDFS = {"gaussian": _norm_pdf64, "laplace": _laplace_pdf64}
+_TARGET_TAILS = {"gaussian": 9.5, "laplace": 16.0}
+
+
+def _target_pdf_prime(family: str, x: np.ndarray) -> np.ndarray:
+    if family == "gaussian":
+        return -x * _norm_pdf64(x)
+    b = 1.0 / math.sqrt(2.0)
+    return -np.sign(x) / b * _laplace_pdf64(x)
+
+
+@functools.lru_cache(maxsize=64)
+def _lambda_and_psi_grid(
+    n: int, family: str = "gaussian"
+) -> Tuple[float, np.ndarray, np.ndarray]:
+    """lambda = inf_{x>0} g'(x)/f'(x) and a grid of psi~(x) = g - lambda f.
+
+    Unit scale: g = the unit-variance target pdf (Gaussian or Laplace),
+    f = unit-variance Irwin-Hall(n).  Returns (lambda, xs, psi(xs)) with
+    xs on [0, xmax], psi decreasing.
+    """
+    ih = NormalizedIrwinHall(n)
+    g_pdf = _TARGET_PDFS[family]
+    scale = ih.unit_scale  # X_unit = scale * X_norm
+    if n <= 2:
+        lam = 0.0  # paper's choice for n <= 2
+    else:
+        xs_n = ih._xs64[1:]  # avoid the x=0 point (0/0)
+        f_prime = ih._dfs64[1:] / scale**2  # d f_unit / dx at xs_n*scale
+        x_unit = xs_n * scale
+        g_prime = _target_pdf_prime(family, x_unit)
+        mask = f_prime < -1e-12
+        ratio = g_prime[mask] / f_prime[mask]
+        lam = float(np.clip(np.min(ratio), 0.0, 1.0)) if mask.any() else 0.0
+    # psi~ = g - lam * f_unit on [0, xmax]; decreasing by construction.
+    xmax = max(math.sqrt(3.0 * n), _TARGET_TAILS[family])
+    xs = np.linspace(0.0, xmax, 16385)
+    f_unit = np.interp(xs / scale, ih._xs64, ih._fs64, right=0.0) / scale
+    psi = np.maximum(g_pdf(xs) - lam * f_unit, 0.0)
+    psi = np.minimum.accumulate(psi)  # enforce monotone (grid noise guard)
+    return lam, xs, psi
+
+
+def gaussian_ih_lambda(n: int) -> float:
+    """Mixture weight lambda of the exact-IH component (Sec. 4.4 step 2)."""
+    return _lambda_and_psi_grid(n)[0]
+
+
+def laplace_ih_lambda(n: int) -> float:
+    return _lambda_and_psi_grid(n, "laplace")[0]
+
+
+class DecomposeTables(NamedTuple):
+    """Device-resident tables for the jittable decompose sampler."""
+
+    n: int
+    family: str
+    lam: float
+    L: float  # support width of unit-variance IH = 2 sqrt(3n)
+    peak_norm: float  # f~(0) of the normalized ([-1/2,1/2]) IH
+    norm_xs: jnp.ndarray  # [0, 1/2] grid
+    norm_fs: jnp.ndarray  # f~ on grid
+    inv_y: jnp.ndarray  # increasing f~ values (reversed)
+    inv_x: jnp.ndarray  # matching x
+    psi_xs: jnp.ndarray
+    psi_inv_y: jnp.ndarray  # increasing psi values (reversed)
+    psi_inv_x: jnp.ndarray
+
+
+@functools.lru_cache(maxsize=64)
+def gaussian_tables(n: int) -> DecomposeTables:
+    # eager construction even if first called under a jit trace — the
+    # lru_cache must never capture traced constants
+    with jax.ensure_compile_time_eval():
+        return _tables_eager(n, "gaussian")
+
+
+@functools.lru_cache(maxsize=64)
+def laplace_tables(n: int) -> DecomposeTables:
+    """Aggregate LAPLACE mechanism tables — the paper's "e.g. Gaussian or
+    Laplace" generality: decompose a unit-variance Laplace into a mixture
+    of shifted/scaled Irwin-Hall."""
+    with jax.ensure_compile_time_eval():
+        return _tables_eager(n, "laplace")
+
+
+def _tables_eager(n: int, family: str) -> DecomposeTables:
+    ih = NormalizedIrwinHall(n)
+    lam, psi_xs, psi = _lambda_and_psi_grid(n, family)
+    return DecomposeTables(
+        n=n,
+        family=family,
+        lam=float(lam),
+        L=2.0 * math.sqrt(3.0 * n),
+        peak_norm=ih.peak,
+        norm_xs=ih.xs,
+        norm_fs=ih.fs,
+        inv_y=ih._inv_y,
+        inv_x=ih._inv_x,
+        psi_xs=jnp.asarray(psi_xs, jnp.float32),
+        psi_inv_y=jnp.asarray(psi[::-1].copy(), jnp.float32),
+        psi_inv_x=jnp.asarray(psi_xs[::-1].copy(), jnp.float32),
+    )
+
+
+class _UnifState(NamedTuple):
+    a: jnp.ndarray
+    b: jnp.ndarray
+    done: jnp.ndarray
+    it: jnp.ndarray
+    key: jnp.ndarray
+
+
+def decompose_unif(tables: DecomposeTables, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Algorithm DECOMPOSEUNIF: (a, b) with a*X~ + b ~ U(-1/2, 1/2),
+    X~ ~ normalized Irwin-Hall on [-1/2, 1/2]."""
+
+    f0 = tables.peak_norm
+
+    def pdf(x):
+        return jnp.interp(jnp.abs(x), tables.norm_xs, tables.norm_fs, right=0.0)
+
+    def inv(y):
+        return jnp.interp(y, tables.inv_y, tables.inv_x)
+
+    def cond(st: _UnifState):
+        return jnp.logical_and(~st.done, st.it < _MAX_ITERS)
+
+    def body(st: _UnifState):
+        key, k1, k2 = jax.random.split(st.key, 3)
+        u = jax.random.uniform(k1, minval=-0.5, maxval=0.5)
+        v = jax.random.uniform(k2)
+        accept = v <= pdf(u) / f0
+        s = inv(v * f0)  # positive edge of {f~ < v f0}
+        b_new = st.b + st.a * jnp.sign(u) * 0.5 * (s + 0.5)
+        a_new = st.a * (0.5 - s)
+        return _UnifState(
+            a=jnp.where(accept, st.a, a_new),
+            b=jnp.where(accept, st.b, b_new),
+            done=accept,
+            it=st.it + 1,
+            key=key,
+        )
+
+    init = _UnifState(
+        a=jnp.float32(1.0),
+        b=jnp.float32(0.0),
+        done=jnp.array(False),
+        it=jnp.int32(0),
+        key=key,
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out.a, out.b
+
+
+def decompose_gaussian(tables: DecomposeTables, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Algorithm DECOMPOSE for Q = N(0,1), P = unit-variance IH(n).
+
+    Returns (A, B) such that A * Z_unit + B ~ N(0, 1) where
+    Z_unit ~ IH(n, 0, 1).  vmap over ``key`` for per-coordinate draws.
+    """
+    kx, kv, ku = jax.random.split(key, 3)
+    if tables.family == "laplace":
+        b = 1.0 / math.sqrt(2.0)
+        x = b * jax.random.laplace(kx)
+        g_x = jnp.exp(-jnp.abs(x) / b) / (2.0 * b)
+    else:
+        x = jax.random.normal(kx)
+        g_x = jnp.exp(-0.5 * x * x) / math.sqrt(2.0 * math.pi)
+    v = jax.random.uniform(kv) * g_x
+    scale = tables.L / 1.0  # unit support width; X_unit = L * X_norm
+    f_unit = (
+        jnp.interp(jnp.abs(x) / scale, tables.norm_xs, tables.norm_fs, right=0.0)
+        / scale
+    )
+    take_f = v > g_x - tables.lam * f_unit  # exact-IH component (A,B)=(1,0)
+    s = jnp.interp(v, tables.psi_inv_y, tables.psi_inv_x)  # psi~^{-1}(v)
+    a_u, b_u = decompose_unif(tables, ku)
+    A = 2.0 * a_u * s / tables.L
+    B = 2.0 * b_u * s
+    return (
+        jnp.where(take_f, 1.0, A).astype(jnp.float32),
+        jnp.where(take_f, 0.0, B).astype(jnp.float32),
+    )

@@ -1,0 +1,179 @@
+"""Unimodal symmetric target noise distributions for AINQ mechanisms.
+
+Every distribution here is symmetric around 0 with a unimodal pdf f_Z.
+The layered quantizers (repro.core.layered) need, besides pdf/sampling:
+
+  * ``peak``      -- Zbar = f_Z(0) = max f_Z
+  * ``b_plus(v)`` -- positive edge of the superlevel set
+                     {x : f_Z(x) >= v} for v in (0, peak]
+
+which have closed forms for Gaussian and Laplace targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Unimodal",
+    "Gaussian",
+    "Laplace",
+    "layer_sample_direct",
+    "layer_sample_shifted",
+]
+
+_LOG2 = math.log(2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Unimodal:
+    """Base class: symmetric unimodal distribution centered at 0."""
+
+    def pdf(self, x):
+        raise NotImplementedError
+
+    @property
+    def peak(self) -> float:
+        """Zbar = f_Z(0)."""
+        raise NotImplementedError
+
+    def b_plus(self, v):
+        """sup{x : f_Z(x) >= v} for 0 < v <= peak."""
+        raise NotImplementedError
+
+    def sample(self, key, shape=(), dtype=jnp.float32):
+        raise NotImplementedError
+
+    @property
+    def variance(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def mean_abs(self) -> float:
+        """E|Z|."""
+        raise NotImplementedError
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.variance)
+
+    # --- layered-quantizer geometry (symmetric case) -------------------
+    def step_direct(self, d):
+        """Quantization step for the direct layered quantizer: lambda(L_d)."""
+        return 2.0 * self.b_plus(d)
+
+    def offset_direct(self, d):
+        """Interval midpoint (0 by symmetry)."""
+        return jnp.zeros_like(d)
+
+    def step_shifted(self, w):
+        """f_W(w) = b+(w) + b+(Zbar - w)  (symmetric b-(x) = -b+(x))."""
+        return self.b_plus(w) + self.b_plus(self.peak - w)
+
+    def offset_shifted(self, w):
+        """Interval midpoint (b+(w) - b+(Zbar - w)) / 2."""
+        return 0.5 * (self.b_plus(w) - self.b_plus(self.peak - w))
+
+    @property
+    def min_step_shifted(self) -> float:
+        """eta_Z = min f_W > 0 (Prop. 2). Overridden with closed forms."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Gaussian(Unimodal):
+    sigma: float = 1.0
+
+    def pdf(self, x):
+        s = self.sigma
+        return jnp.exp(-0.5 * (x / s) ** 2) / (s * math.sqrt(2.0 * math.pi))
+
+    @property
+    def peak(self) -> float:
+        return 1.0 / (self.sigma * math.sqrt(2.0 * math.pi))
+
+    def b_plus(self, v):
+        # f(x) = v  =>  x = sigma * sqrt(-2 ln(v sigma sqrt(2 pi)))
+        s = self.sigma
+        arg = -2.0 * jnp.log(jnp.clip(v * s * math.sqrt(2.0 * math.pi), 1e-37, 1.0))
+        return s * jnp.sqrt(jnp.maximum(arg, 0.0))
+
+    def sample(self, key, shape=(), dtype=jnp.float32):
+        return self.sigma * jax.random.normal(key, shape, dtype)
+
+    @property
+    def variance(self) -> float:
+        return self.sigma**2
+
+    @property
+    def mean_abs(self) -> float:
+        return self.sigma * math.sqrt(2.0 / math.pi)
+
+    @property
+    def min_step_shifted(self) -> float:
+        # eta = 2 sigma sqrt(ln 4)   (Prop. 2)
+        return 2.0 * self.sigma * math.sqrt(math.log(4.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Laplace(Unimodal):
+    scale: float = 1.0  # b; std = b*sqrt(2)
+
+    @classmethod
+    def from_std(cls, sigma: float) -> "Laplace":
+        return cls(scale=sigma / math.sqrt(2.0))
+
+    def pdf(self, x):
+        b = self.scale
+        return jnp.exp(-jnp.abs(x) / b) / (2.0 * b)
+
+    @property
+    def peak(self) -> float:
+        return 1.0 / (2.0 * self.scale)
+
+    def b_plus(self, v):
+        # f(x) = v  =>  x = -b ln(2 b v)
+        b = self.scale
+        return -b * jnp.log(jnp.clip(2.0 * b * v, 1e-37, 1.0))
+
+    def sample(self, key, shape=(), dtype=jnp.float32):
+        return self.scale * jax.random.laplace(key, shape, dtype)
+
+    @property
+    def variance(self) -> float:
+        return 2.0 * self.scale**2
+
+    @property
+    def mean_abs(self) -> float:
+        return self.scale
+
+    @property
+    def min_step_shifted(self) -> float:
+        # eta = sigma sqrt(2) ln2 = 2 b ln 2   (Prop. 2, b = sigma/sqrt(2))
+        return 2.0 * self.scale * _LOG2
+
+
+def layer_sample_direct(dist: Unimodal, key, shape=(), dtype=jnp.float32):
+    """Sample D ~ f_D where f_D(v) = lambda(L_v(f_Z)) = 2 b+(v).
+
+    (Z, V) uniform under the graph of f_Z  =>  marginal of V is f_D.
+    """
+    kz, ku = jax.random.split(key)
+    z = dist.sample(kz, shape, dtype)
+    u = jax.random.uniform(ku, shape, dtype)
+    return u * dist.pdf(z)
+
+
+def layer_sample_shifted(dist: Unimodal, key, shape=(), dtype=jnp.float32):
+    """Sample W ~ f_W where f_W(v) = b+(v) + b+(Zbar - v).
+
+    Mixture of the direct-layer height V (density 2 b+(v), weight 1/2)
+    and its reflection Zbar - V (weight 1/2).
+    """
+    kd, kf = jax.random.split(key)
+    v = layer_sample_direct(dist, kd, shape, dtype)
+    flip = jax.random.bernoulli(kf, 0.5, shape)
+    return jnp.where(flip, dist.peak - v, v)

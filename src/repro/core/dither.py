@@ -1,0 +1,38 @@
+"""Subtractive dithered quantization (paper Example 1).
+
+For step size w > 0 and shared randomness S ~ U(-1/2, 1/2):
+
+    M = round(X / w + S)            (round = floor(. + 1/2), paper notation)
+    Y = (M - S) * w
+
+Then Y - X ~ U(-w/2, w/2), independent of X — the building block of every
+mechanism in this library.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["round_half_up", "dither_noise", "dither_encode", "dither_decode"]
+
+
+def round_half_up(x):
+    """Paper's round-to-nearest: floor(x + 1/2)."""
+    return jnp.floor(x + 0.5)
+
+
+def dither_noise(key, shape=(), dtype=jnp.float32):
+    """S ~ U(-1/2, 1/2)."""
+    return jax.random.uniform(key, shape, dtype, minval=-0.5, maxval=0.5)
+
+
+def dither_encode(x, w, s, *, msg_dtype=jnp.int32):
+    """M = round(x / w + s). ``w`` may be a scalar or broadcastable array."""
+    m = round_half_up(x / w + s)
+    # int32 covers |x|/w up to ~2.1e9 — asserted at the mechanism level.
+    return m.astype(msg_dtype)
+
+
+def dither_decode(m, w, s, *, dtype=jnp.float32):
+    """Y = (M - s) * w."""
+    return (m.astype(dtype) - s.astype(dtype)) * jnp.asarray(w, dtype)

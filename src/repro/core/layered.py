@@ -1,0 +1,107 @@
+"""Direct and shifted layered quantizers (paper Definitions 4 and 5).
+
+Both are point-to-point AINQ mechanisms: the error Y - X follows the
+target unimodal distribution f_Z exactly, independent of X.  They are
+subtractive dithering with a *random* step size:
+
+  * direct  (Def. 4): step = f_D(D) = lambda(L_D(f_Z)), D ~ f_D.
+    Error | D  ~  U over the superlevel interval  =>  marginal = f_Z.
+    Near-optimal variable-length cost (Eq. 5) but step can be ~0.
+
+  * shifted (Def. 5, Wilson's layered multishift coupling):
+    step = f_W(W) = b+(W) + b+(Zbar - W), W ~ f_W, with a per-layer
+    offset.  Step is bounded below by eta_Z > 0 (Prop. 2)  =>  supports
+    fixed-length codes:  |Supp M| <= 2 + t / eta_Z.
+
+Shared randomness S = (U, D-or-W) is derived per coordinate from a PRNG
+key (clients and server hold the same key = shared seed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dither
+from repro.core.distributions import (
+    Unimodal,
+    layer_sample_direct,
+    layer_sample_shifted,
+)
+
+__all__ = ["LayeredQuantizer", "layered_randomness", "layered_encode", "layered_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayeredQuantizer:
+    """Point-to-point AINQ quantizer with exact error distribution.
+
+    Attributes:
+      dist:    target error distribution (symmetric unimodal).
+      shifted: False -> direct layered (Def. 4); True -> shifted (Def. 5).
+    """
+
+    dist: Unimodal
+    shifted: bool = False
+
+    # -- shared randomness ------------------------------------------------
+    def randomness(self, key, shape=(), dtype=jnp.float32):
+        """S = (U, layer): U ~ U(0,1); layer ~ f_D or f_W, per coordinate."""
+        ku, kl = jax.random.split(key)
+        u = jax.random.uniform(ku, shape, dtype)
+        if self.shifted:
+            layer = layer_sample_shifted(self.dist, kl, shape, dtype)
+        else:
+            layer = layer_sample_direct(self.dist, kl, shape, dtype)
+        return u, layer
+
+    def step_offset(self, layer):
+        if self.shifted:
+            return self.dist.step_shifted(layer), self.dist.offset_shifted(layer)
+        return self.dist.step_direct(layer), self.dist.offset_direct(layer)
+
+    # -- encode / decode ---------------------------------------------------
+    def encode(self, x, rand: Tuple):
+        u, layer = rand
+        step, _ = self.step_offset(layer)
+        return dither.dither_encode(x, step, u - 0.5)
+
+    def decode(self, m, rand: Tuple, *, dtype=jnp.float32):
+        u, layer = rand
+        step, offset = self.step_offset(layer)
+        return dither.dither_decode(m, step, u - 0.5, dtype=dtype) + offset.astype(dtype)
+
+    def __call__(self, key, x):
+        """Compress x: returns (y, m, rand) with y - x ~ dist exactly."""
+        rand = self.randomness(key, jnp.shape(x), jnp.result_type(x, jnp.float32))
+        m = self.encode(x, rand)
+        return self.decode(m, rand), m, rand
+
+    # -- fixed-length support (shifted only) --------------------------------
+    def support_size(self, t: float) -> int:
+        """|Supp M| bound for inputs in an interval of length t (Prop. 2)."""
+        if not self.shifted:
+            raise ValueError("direct layered quantizer has unbounded support")
+        import math
+
+        return int(math.floor(2.0 + t / self.dist.min_step_shifted))
+
+    def fixed_bits(self, t: float) -> int:
+        import math
+
+        return max(1, math.ceil(math.log2(self.support_size(t))))
+
+
+# Functional aliases (used by shard_map code where dataclasses are static).
+def layered_randomness(dist, shifted, key, shape, dtype=jnp.float32):
+    return LayeredQuantizer(dist, shifted).randomness(key, shape, dtype)
+
+
+def layered_encode(dist, shifted, x, rand):
+    return LayeredQuantizer(dist, shifted).encode(x, rand)
+
+
+def layered_decode(dist, shifted, m, rand, dtype=jnp.float32):
+    return LayeredQuantizer(dist, shifted).decode(m, rand, dtype=dtype)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused shifted-layered-quantizer encode (Gaussian
+target).
+
+Computes, per element, the layer geometry (superlevel-set edges from the
+closed-form Gaussian inverse pdf) AND the dithered round in one VMEM
+pass — the b+ transcendentals (log, sqrt) never round-trip to HBM:
+
+    step = b+(W) + b+(peak - W)
+    m    = floor(x / step + U)
+
+This is the per-client encode of the individual/SIGM mechanisms (Def. 5)
+at gradient scale.  Decode reuses the same geometry (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256
+LANES = 128
+
+
+def _b_plus(v, sigma: float):
+    c = sigma * math.sqrt(2.0 * math.pi)
+    arg = -2.0 * jnp.log(jnp.clip(v * c, 1e-37, 1.0))
+    return sigma * jnp.sqrt(jnp.maximum(arg, 0.0))
+
+
+def _encode_kernel(x_ref, u_ref, w_ref, o_ref, *, sigma: float):
+    peak = 1.0 / (sigma * math.sqrt(2.0 * math.pi))
+    x = x_ref[...]
+    u = u_ref[...]
+    lw = w_ref[...]
+    step = _b_plus(lw, sigma) + _b_plus(peak - lw, sigma)
+    o_ref[...] = jnp.floor(x / step + u).astype(jnp.int32)
+
+
+def _decode_kernel(m_ref, u_ref, w_ref, o_ref, *, sigma: float):
+    peak = 1.0 / (sigma * math.sqrt(2.0 * math.pi))
+    m = m_ref[...].astype(jnp.float32)
+    u = u_ref[...]
+    lw = w_ref[...]
+    bp = _b_plus(lw, sigma)
+    bm = _b_plus(peak - lw, sigma)
+    step = bp + bm
+    offset = 0.5 * (bp - bm)
+    o_ref[...] = (m - u + 0.5) * step + offset
+
+
+def _call(kernel, out_dtype, sigma, interpret, *args):
+    R, L = args[0].shape
+    bm = min(BLOCK_R, R)
+    return pl.pallas_call(
+        functools.partial(kernel, sigma=sigma),
+        grid=(pl.cdiv(R, bm),),
+        in_specs=[pl.BlockSpec((bm, LANES), lambda i: (i, 0)) for _ in args],
+        out_specs=pl.BlockSpec((bm, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, L), out_dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def layered_encode(x, u, layer, sigma: float, *, interpret: bool = False):
+    """x, u, layer: (R, 128) f32 -> messages int32 (R, 128)."""
+    return _call(_encode_kernel, jnp.int32, sigma, interpret, x, u, layer)
+
+
+def layered_decode(m, u, layer, sigma: float, *, interpret: bool = False):
+    """messages + shared randomness -> reconstruction (R, 128) f32."""
+    return _call(_decode_kernel, jnp.float32, sigma, interpret, m, u, layer)

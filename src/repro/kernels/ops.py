@@ -1,0 +1,110 @@
+"""jit'd public wrappers around the Pallas kernels: shape padding /
+layout handling so callers pass natural shapes.
+
+``interpret=True`` (default on CPU) runs the kernel bodies in Python —
+the validation mode for this container; on a real TPU pass
+``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dither_pack as dp
+from repro.kernels import flash_attention as fa
+from repro.kernels import layered_encode as le
+
+LANES = 128
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(x, g):
+    """Flatten to (R, g, 128), padding with zeros; returns (arr, n)."""
+    n = x.size
+    row = g * LANES
+    R = -(-n // row)
+    pad = R * row - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(R, g, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("w", "bits", "interpret"))
+def dither_pack_encode(x, s, w, bits: int = 8, interpret: bool | None = None):
+    """Quantize+pack a tensor of any shape -> int32 words (R, 128).
+
+    Returns (packed, orig_size). ``s`` must match x's shape
+    (U(-1/2,1/2) shared randomness)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    g = 32 // bits
+    xr, n = _pad_rows(x, g)
+    sr, _ = _pad_rows(s, g)
+    return dp.dither_pack(xr, sr, float(w), bits, interpret=interpret), n
+
+
+@functools.partial(jax.jit, static_argnames=("w", "bits", "shape", "interpret"))
+def dither_unpack_decode(word, s, w, bits: int, shape, interpret: bool | None = None):
+    """Unpack+decode back to ``shape``."""
+    interpret = _on_cpu() if interpret is None else interpret
+    g = 32 // bits
+    sr, n = _pad_rows(s, g)
+    y = dp.unpack_decode(word, sr, float(w), bits, interpret=interpret)
+    return y.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def layered_encode(x, u, layer, sigma: float, interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    xr, n = _pad_rows(x, 1)
+    ur, _ = _pad_rows(u, 1)
+    lr, _ = _pad_rows(jnp.maximum(layer, 1e-30), 1)
+    m = le.layered_encode(
+        xr.reshape(-1, LANES), ur.reshape(-1, LANES), lr.reshape(-1, LANES),
+        sigma, interpret=interpret,
+    )
+    return m.reshape(-1)[: x.size].reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def layered_decode(m, u, layer, sigma: float, interpret: bool | None = None):
+    interpret = _on_cpu() if interpret is None else interpret
+    mr, _ = _pad_rows(m, 1)
+    ur, _ = _pad_rows(u, 1)
+    lr, _ = _pad_rows(jnp.maximum(layer, 1e-30), 1)
+    y = le.layered_decode(
+        mr.reshape(-1, LANES).astype(jnp.int32), ur.reshape(-1, LANES),
+        lr.reshape(-1, LANES), sigma, interpret=interpret,
+    )
+    return y.reshape(-1)[: m.size].reshape(m.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """q (B, T, H, D), k/v (B, S, HK, D); GQA via KV-head repetition."""
+    interpret = _on_cpu() if interpret is None else interpret
+    B, T, H, D = q.shape
+    S, HK = k.shape[1], k.shape[2]
+    if HK != H:
+        rep = H // HK
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # pad sequence dims to block multiples (padded KEYS are masked inside
+    # the kernel via the col < S bound; padded V rows must be zeros so
+    # 0-probability x garbage never produces NaN)
+    Tp = -(-T // bq) * bq
+    Sp = -(-S // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    qf = qp.transpose(0, 2, 1, 3).reshape(B * H, Tp, D)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * H, Sp, D)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * H, Sp, D)
+    o = fa.flash_attention_tpu(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                               kv_len=S, interpret=interpret)
+    return o.reshape(B, H, Tp, D)[:, :, :T].transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing never touches jax
+device state.  Production target: TPU v5e, 256 chips/pod (16 x 16),
+2 pods for the multi-pod dry-run.  Axes:
+
+  pod   — FL clients / cross-site data parallelism (compressed
+          aggregation runs over this axis; see repro.dist.compress)
+  data  — within-pod data parallelism + ZeRO/FSDP param sharding
+  model — tensor parallelism
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

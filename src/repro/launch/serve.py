@@ -1,0 +1,87 @@
+"""Serving launcher: batched prefill + decode with KV caches.
+
+CPU-container usage (reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
+      --batch 2 --prompt-len 16 --gen 8
+
+On a TPU mesh the same entry point serves the full config with the
+decode-cell shardings from the dry-run (weights resident bf16 for
+<=14B archs per EXPERIMENTS.md Perf H1).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import synthetic
+from repro.dist import meshctx
+from repro.models import nn, registry
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    if args.smoke:
+        cfg = cfg.scaled(compute_dtype="float32")
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    meshctx.set_mesh(mesh)
+
+    params = nn.init_params(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    serve = jax.jit(registry.serve_fn(cfg))
+    B, P = args.batch, args.prompt_len
+    prompts = synthetic.with_frontend_stubs(
+        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)},
+        cfg,
+    )
+
+    # prefill: build the cache by stepping the prompt (cache-structured
+    # families) or via the prefill fn (dense, returns stacked KV)
+    t0 = time.time()
+    if cfg.kind in registry.DENSE_KINDS:
+        logits, caches = registry.prefill_fn(cfg)(params, prompts)
+        cache = {"k": caches[0], "v": caches[1]}
+    else:
+        cache = registry.init_decode_state(cfg, B, P)
+        logits = None
+        for t in range(P):
+            logits, cache = serve(params, {"tokens": prompts["tokens"][:, t:t + 1]}, cache)
+    print(f"[serve] prefill {B}x{P} in {time.time() - t0:.2f}s")
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    tok = jnp.clip(tok, 0, cfg.vocab - 1)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen):
+        logits, new_kv = serve(params, {"tokens": tok}, cache)
+        if cfg.kind in registry.DENSE_KINDS:
+            # ring-buffer append (greedy demo: keep the fixed-size window)
+            cache = {
+                "k": jnp.concatenate([cache["k"][:, :, 1:], new_kv[0]], axis=2),
+                "v": jnp.concatenate([cache["v"][:, :, 1:], new_kv[1]], axis=2),
+            }
+        else:
+            cache = new_kv
+        tok = jnp.clip(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), 0, cfg.vocab - 1)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"[serve] generated {args.gen} tokens/seq in {dt:.2f}s "
+          f"({B * args.gen / dt:.1f} tok/s)")
+    print("[serve] sample token ids:", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Mamba2 (SSD) block — chunked, MXU-friendly formulation.
+
+State-space recurrence per head (P = head dim, N = ssm_state):
+    h_t = exp(A dt_t) h_{t-1} + dt_t * B_t x_t^T       h in R^{P x N}
+    y_t = h_t C_t + D * x_t
+
+Chunked algorithm (TPU-native adaptation, DESIGN.md §3): split T into
+chunks of size Q; within-chunk interactions are a masked (Q x Q) matmul
+(MXU work), cross-chunk state is a ``lax.scan`` over T/Q steps.  The
+depthwise conv frontend of Mamba2 is omitted (negligible FLOPs; noted
+in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models.config import ModelConfig
+from repro.models.nn import ParamSpec
+
+
+def mamba2_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = d_in // 64  # head dim 64
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * n + h), ("embed", "mlp")),
+        "out_proj": ParamSpec((d_in, d), ("mlp", "embed")),
+        "A_log": ParamSpec((h,), (None,), "zeros"),
+        "D": ParamSpec((h,), (None,), "ones"),
+        "dt_bias": ParamSpec((h,), (None,), "zeros"),
+        "norm_w": ParamSpec((d,), ("embed",), "ones"),
+        "gate_norm": ParamSpec((d_in,), ("mlp",), "ones"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, x, p):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // 64
+    zxbcdt = nn.dense(x, p["in_proj"])
+    z, xs, B, C, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xs, B, C, dt, h, n
+
+
+def mamba2_block(cfg: ModelConfig, p, x):
+    """Training/prefill: x (B, T, D) -> (y, final_state (B,H,P,N))."""
+    Bsz, T, _ = x.shape
+    z, xs, Bm, Cm, dt, H, N = _split_proj(cfg, x, p)
+    P = 64
+    Q = min(cfg.ssm_chunk, T)
+    nq = T // Q
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,) negative
+
+    xh = xs.reshape(Bsz, nq, Q, H, P)
+    dtc = dt.reshape(Bsz, nq, Q, H)
+    Bc = Bm.reshape(Bsz, nq, Q, N)
+    Cc = Cm.reshape(Bsz, nq, Q, N)
+
+    la = dtc * A  # per-step log decay (B, nq, Q, H)
+    cum = jnp.cumsum(la, axis=2)  # L_t = sum_{tau<=t} la
+
+    # within chunk: y_intra[t] = sum_{s<=t} exp(L_t - L_s) dt_s (C_t.B_s) x_s
+    cb = jnp.einsum("bqtn,bqsn->bqts", Cc, Bc)  # (B, nq, Q, Q)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nq,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    m = jnp.where(mask[None, None, :, :, None], dec, 0.0).astype(xh.dtype)
+    scores = (cb[..., None].astype(xh.dtype) * m
+              * dtc[:, :, None, :, :].astype(xh.dtype))  # (B,nq,t,s,H) bf16
+    y_intra = jnp.einsum("bqtsh,bqshp->bqthp", scores, xh)
+
+    # cross chunk: carry state h (B, H, P, N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B, nq, H)
+    # state increment of each chunk: sum_s exp(L_end - L_s) dt_s x_s B_s^T
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B, nq, Q, H)
+    inc = jnp.einsum("bqsh,bqshp,bqsn->bqhpn", w.astype(xh.dtype), xh, Bc.astype(xh.dtype))
+
+    def step(h, inp):
+        cd, ic = inp  # (B, H), (B, H, P, N)
+        h_new = h * cd[..., None, None] + ic
+        return h_new, h  # emit state *before* this chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        step, h0, (chunk_decay.swapaxes(0, 1).astype(jnp.float32), inc.swapaxes(0, 1).astype(jnp.float32))
+    )
+    h_prev = h_prev.swapaxes(0, 1)  # (B, nq, H, P, N)
+
+    # cross contribution: y_cross[t] = exp(L_t) * C_t . h_prev
+    dec_t = jnp.exp(cum)  # (B, nq, Q, H)
+    y_cross = jnp.einsum(
+        "bqtn,bqhpn,bqth->bqthp", Cc.astype(xh.dtype), h_prev.astype(xh.dtype), dec_t.astype(xh.dtype)
+    )
+
+    y = (y_intra + y_cross).reshape(Bsz, T, H * P)
+    y = y + xs * p["D"].astype(xs.dtype).repeat(P)[None, None, :]
+    y = nn.rms_norm(y, p["gate_norm"]) * jax.nn.silu(z)
+    return nn.dense(y, p["out_proj"]), h_final
+
+
+def mamba2_decode(cfg: ModelConfig, p, x, state):
+    """Single step: x (B, 1, D), state (B, H, P, N)."""
+    z, xs, Bm, Cm, dt, H, N = _split_proj(cfg, x, p)
+    P = 64
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A)  # (B, H)
+    xh = xs.reshape(-1, H, P)
+    inc = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0].astype(xh.dtype), xh, Bm[:, 0].astype(xh.dtype))
+    new_state = state * a[..., None, None].astype(state.dtype) + inc.astype(state.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", new_state.astype(xh.dtype), Cm[:, 0].astype(xh.dtype))
+    y = y.reshape(x.shape[0], 1, H * P)
+    y = y + xs * p["D"].astype(xs.dtype).repeat(P)[None, None, :]
+    y = nn.rms_norm(y, p["gate_norm"]) * jax.nn.silu(z)
+    return nn.dense(y, p["out_proj"]), new_state

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer (dbrx / phi3.5-moe) with capacity-based
+local dispatch under ``shard_map``.
+
+Tokens are data-sharded; dispatch is *local to each data shard* (no
+cross-shard token movement): top-k routing, position-in-expert via a
+one-hot cumsum (sort-free), scatter into an (E, C, D) buffer, batched
+expert FFN with tensor-parallel d_ff (psum over 'model'), gather+combine.
+Expert weights are TP-sharded over d_ff and FSDP-sharded over the data
+axis at rest; the shard_map boundary all-gathers them on use (ZeRO-3
+semantics).  Expert-parallel (experts over the model axis + all_to_all)
+is the §Perf hillclimb variant in repro.models.moe_ep.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import meshctx
+from repro.models import nn
+from repro.models.config import ModelConfig
+from repro.models.nn import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "w_up": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "w_down": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _local_moe(cfg: ModelConfig, x, router, w_gate, w_up, w_down):
+    """Per-shard MoE: x (B_loc, T, D) with *local* d_ff shards of the
+    expert weights; psum('model') reduces the down-projection."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(B * T, D)
+    N = B * T
+    C = capacity(N, cfg)
+
+    gates = jax.nn.softmax(
+        jnp.einsum("nd,de->ne", tokens.astype(jnp.float32), router.astype(jnp.float32))
+    )
+    top_w, top_e = jax.lax.top_k(gates, K)  # (N, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)  # (N*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (N*K, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # position within expert
+    flat_pos = jnp.sum(pos * onehot, axis=-1)  # (N*K,)
+    keep = flat_pos < C
+
+    tok_idx = jnp.repeat(jnp.arange(N), K)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[
+        jnp.where(keep, flat_e, 0), jnp.where(keep, flat_pos, 0)
+    ].add(jnp.where(keep[:, None], tokens[tok_idx], 0.0))
+
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(x.dtype))
+    ) * jnp.einsum("ecd,edf->ecf", buf, w_up.astype(x.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+    out_buf = jax.lax.psum(out_buf, "model")  # TP reduction over d_ff
+
+    gathered = out_buf[jnp.where(keep, flat_e, 0), jnp.where(keep, flat_pos, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = top_w.reshape(-1).astype(x.dtype)
+    combined = jax.ops.segment_sum(gathered * w[:, None], tok_idx, num_segments=N)
+    # router z-loss / load-balance aux could be returned; kept internal here
+    return combined.reshape(B, T, D)
+
+
+def moe_block(cfg: ModelConfig, layer_params, x):
+    """shard_map wrapper: tokens stay on their data shard; d_ff is TP."""
+    mesh = meshctx.get_mesh()
+    batch = meshctx.batch_axes(mesh)
+    mdl = meshctx.model_axis(mesh)
+    m = layer_params["moe"]
+
+    n_model = mesh.shape.get("model", 1)
+    use_ep = cfg.moe_ep and mdl is not None and cfg.n_experts % n_model == 0
+    if use_ep:
+        # experts over 'model', full d_ff, all_to_all dispatch
+        fn = jax.shard_map(
+            lambda xx, r, g, u, dn: _local_moe_ep(cfg, xx, r, g, u, dn),
+            mesh=mesh,
+            in_specs=(
+                P(batch if batch else None, None, None),
+                P(None, None),
+                P(mdl, None, None),
+                P(mdl, None, None),
+                P(mdl, None, None),
+            ),
+            out_specs=P(batch if batch else None, None, None),
+            check_vma=False,
+        )
+        return fn(x, m["router"], m["w_gate"], m["w_up"], m["w_down"])
+    fn = jax.shard_map(
+        lambda xx, r, g, u, dn: _local_moe(cfg, xx, r, g, u, dn),
+        mesh=mesh,
+        in_specs=(
+            P(batch if batch else None, None, None),
+            P(None, None),
+            P(None, None, mdl),
+            P(None, None, mdl),
+            P(None, mdl, None),
+        ),
+        out_specs=P(batch if batch else None, None, None),
+        check_vma=False,
+    )
+    return fn(x, m["router"], m["w_gate"], m["w_up"], m["w_down"])
+
+
+def _local_moe_ep(cfg: ModelConfig, x, router, w_gate, w_up, w_down):
+    """Expert-parallel variant (§Perf beyond-paper): experts sharded over
+    'model' (E/mdl per device, FULL d_ff — no TP psum); tokens reach
+    their experts via all_to_all pairs instead.  Wins when
+    2*tokens*D (a2a) < 3*tokens*F (psum'd partials)."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    mdl = jax.lax.axis_size("model")  # devices on the expert axis
+    tokens = x.reshape(B * T, D)
+    N = B * T
+    C = capacity(N, cfg)
+
+    gates = jax.nn.softmax(
+        jnp.einsum("nd,de->ne", tokens.astype(jnp.float32), router.astype(jnp.float32))
+    )
+    top_w, top_e = jax.lax.top_k(gates, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    flat_pos = jnp.sum(pos * onehot, axis=-1)
+    keep = flat_pos < C
+    tok_idx = jnp.repeat(jnp.arange(N), K)
+
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[
+        jnp.where(keep, flat_e, 0), jnp.where(keep, flat_pos, 0)
+    ].add(jnp.where(keep[:, None], tokens[tok_idx], 0.0))
+
+    e_loc = E // mdl  # experts resident on this device
+    # (E, C, D) -> (mdl, e_loc, C, D) -> a2a over 'model' -> tokens for
+    # MY experts from every peer: (mdl, e_loc, C, D) stacked on peers
+    send = buf.reshape(mdl, e_loc, C, D)
+    recv = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0,
+                              tiled=False)  # (peer, e_loc, C, D)
+    recv = recv.transpose(1, 0, 2, 3).reshape(e_loc, mdl * C, D)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", recv, w_gate.astype(x.dtype))
+    ) * jnp.einsum("ecd,edf->ecf", recv, w_up.astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+    out = out.reshape(e_loc, mdl, C, D).transpose(1, 0, 2, 3)
+    back = jax.lax.all_to_all(
+        out, "model", split_axis=0, concat_axis=0, tiled=False,
+    ).reshape(E, C, D)
+
+    gathered = back[jnp.where(keep, flat_e, 0), jnp.where(keep, flat_pos, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = top_w.reshape(-1).astype(x.dtype)
+    combined = jax.ops.segment_sum(gathered * w[:, None], tok_idx, num_segments=N)
+    return combined.reshape(B, T, D)

@@ -1,0 +1,222 @@
+"""Unified model API over all architecture families.
+
+  param_specs(cfg)                    -> ParamSpec tree
+  loss_fn(cfg)(params, batch)         -> scalar NLL (training)
+  prefill_fn(cfg)(params, batch)      -> (last-token logits, cache)
+  serve_fn(cfg)(params, batch, cache) -> (logits, new cache)
+  decode_state_specs(cfg, B, S)       -> ShapeDtypeStruct cache tree
+
+``batch`` is a dict: tokens (B, T) int32 [+ frames / patches for the
+audio / vlm stubs].  Loss is next-token NLL computed internally
+(labels = tokens shifted by one).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn, rwkv6, transformer, whisper, zamba2
+from repro.models.config import ModelConfig
+
+DENSE_KINDS = ("dense", "moe", "llava")
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.kind in DENSE_KINDS:
+        return transformer.param_specs(cfg)
+    if cfg.kind == "rwkv6":
+        return rwkv6.param_specs(cfg)
+    if cfg.kind == "zamba2":
+        return zamba2.param_specs(cfg)
+    if cfg.kind == "whisper":
+        return whisper.param_specs(cfg)
+    raise ValueError(cfg.kind)
+
+
+def logits_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    if cfg.kind in ("dense", "moe"):
+        logits, _ = transformer.forward(cfg, params, tokens)
+    elif cfg.kind == "llava":
+        logits, _ = transformer.forward(cfg, params, tokens, patches=batch["patches"])
+        logits = logits[:, batch["patches"].shape[1] :]  # text positions only
+    elif cfg.kind == "rwkv6":
+        logits = rwkv6.forward(cfg, params, tokens)
+    elif cfg.kind == "zamba2":
+        logits = zamba2.forward(cfg, params, tokens)
+    elif cfg.kind == "whisper":
+        logits = whisper.forward(cfg, params, tokens, batch["frames"])
+    else:
+        raise ValueError(cfg.kind)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig) -> Callable:
+    def loss(params, batch):
+        logits = logits_fn(cfg, params, batch)
+        tokens = batch["tokens"]
+        return nn.cross_entropy_loss(logits[:, :-1], tokens[:, 1:])
+
+    return loss
+
+
+# ----------------------------------------------------------------- serving
+def decode_state_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Abstract cache tree for the decode dry-run (no allocation)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    L, hk, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+
+    def sds(shape, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if cfg.kind in DENSE_KINDS:
+        return {
+            "k": sds((L, batch, seq_len, hk, hd)),
+            "v": sds((L, batch, seq_len, hk, hd)),
+        }
+    if cfg.kind == "whisper":
+        return {
+            "k": sds((L, batch, seq_len, hk, hd)),
+            "v": sds((L, batch, seq_len, hk, hd)),
+            "cross_k": sds((L, batch, cfg.encoder_len, hk, hd)),
+            "cross_v": sds((L, batch, cfg.encoder_len, hk, hd)),
+        }
+    if cfg.kind == "rwkv6":
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.eval_shape(lambda: rwkv6.init_state(cfg, batch)),
+        )
+    if cfg.kind == "zamba2":
+        win = min(seq_len, cfg.window or seq_len)
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.eval_shape(lambda: zamba2.init_state(cfg, batch, win)),
+        )
+    raise ValueError(cfg.kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero-initialized cache (for smoke tests / real serving)."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), decode_state_specs(cfg, batch, seq_len)
+    )
+
+
+def serve_fn(cfg: ModelConfig) -> Callable:
+    """serve(params, batch{tokens (B,1)}, cache) -> (logits, new_kv/cache)."""
+
+    def serve(params, batch, cache):
+        tokens = batch["tokens"]
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.kind in DENSE_KINDS:
+            x = transformer.embed_tokens(cfg, params, tokens, dtype)
+            S = cache["k"].shape[2]
+            rope = nn.rope_freqs(cfg.hd, S + 1, cfg.rope_theta, dtype)
+            y, new_kv = transformer.decoder_decode(
+                cfg, params, x, rope, (cache["k"], cache["v"])
+            )
+            y = transformer._norm(cfg, y, params, "final")
+            logits = transformer.unembed(cfg, params, y)
+            return logits, new_kv
+        if cfg.kind == "whisper":
+            logits, new_kv = whisper.decode_step(
+                cfg, params, tokens,
+                (cache["k"], cache["v"]),
+                (cache["cross_k"], cache["cross_v"]),
+            )
+            return logits, new_kv
+        if cfg.kind == "rwkv6":
+            return rwkv6.decode(cfg, params, tokens, cache)
+        if cfg.kind == "zamba2":
+            return zamba2.decode(cfg, params, tokens, cache, pos=None)
+        raise ValueError(cfg.kind)
+
+    return serve
+
+
+def prefill_fn(cfg: ModelConfig) -> Callable:
+    """prefill(params, batch) -> last-position logits (+ caches for the
+    dense families)."""
+
+    def prefill(params, batch):
+        if cfg.kind in ("dense", "moe"):
+            logits, caches = transformer.forward(
+                cfg, params, batch["tokens"], last_only=True)
+            return logits, caches
+        if cfg.kind == "llava":
+            logits, caches = transformer.forward(
+                cfg, params, batch["tokens"], patches=batch["patches"],
+                last_only=True)
+            return logits, caches
+        if cfg.kind == "whisper":
+            return whisper.forward(cfg, params, batch["tokens"],
+                                   batch["frames"], last_only=True), None
+        if cfg.kind == "rwkv6":
+            return rwkv6.forward(cfg, params, batch["tokens"], last_only=True), None
+        if cfg.kind == "zamba2":
+            return zamba2.forward(cfg, params, batch["tokens"], last_only=True), None
+        raise ValueError(cfg.kind)
+
+    return prefill
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh, batch: int, seq_len: int):
+    """NamedSharding tree for the decode caches, per family.
+
+    KV caches shard heads over 'model' when divisible, otherwise the
+    *sequence* dim (ring-attention-style decode: scores are computed on
+    per-shard KV slices and combined by the softmax collectives).
+    Without this, GQA caches with HK < model replicate — 69 GB/chip for
+    qwen3-32b decode_32k (measured; EXPERIMENTS.md §Perf H1)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import sharding as shd
+
+    mdl = mesh.shape.get("model", 1)
+
+    def b_axis(bsz):
+        return shd.batch_spec(mesh, 1, bsz)[0]
+
+    def kv_spec(shape):  # (L, B, S, HK, hd)
+        _, B, S, HK, _ = shape
+        if HK % mdl == 0:
+            return P(None, b_axis(B), None, "model", None)
+        if S % mdl == 0:
+            return P(None, b_axis(B), "model", None, None)
+        return P(None, b_axis(B))
+
+    def make(tree_spec_fn, specs):
+        return {
+            k: NamedSharding(mesh, tree_spec_fn(k, v.shape))
+            for k, v in specs.items()
+        }
+
+    specs = decode_state_specs(cfg, batch, seq_len)
+    if cfg.kind in DENSE_KINDS or cfg.kind == "whisper":
+        return make(lambda k, s: kv_spec(s), specs)
+    if cfg.kind == "rwkv6":
+        def spec(k, s):
+            if k == "wkv":  # (L, B, H, K, K)
+                h_ax = "model" if s[2] % mdl == 0 else None
+                return P(None, b_axis(s[1]), h_ax, None, None)
+            d_ax = "model" if s[3] % mdl == 0 else None  # (L, B, 1, D)
+            return P(None, b_axis(s[1]), None, d_ax)
+
+        return make(spec, specs)
+    if cfg.kind == "zamba2":
+        def spec(k, s):
+            if k == "ssm_groups":  # (G, pg, B, H, P, N)
+                h_ax = "model" if s[3] % mdl == 0 else None
+                return P(None, None, b_axis(s[2]), h_ax, None, None)
+            if k == "ssm_tail":  # (T, B, H, P, N)
+                h_ax = "model" if s[2] % mdl == 0 else None
+                return P(None, b_axis(s[1]), h_ax, None, None)
+            # attn_k / attn_v: (B, win, HK, hd)
+            h_ax = "model" if s[2] % mdl == 0 else None
+            return P(b_axis(s[0]), None, h_ax, None)
+
+        return make(spec, specs)
+    raise ValueError(cfg.kind)

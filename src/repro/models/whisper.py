@@ -1,0 +1,154 @@
+"""Whisper-small backbone: transformer encoder-decoder.
+
+The audio frontend (log-mel + conv downsampling) is a STUB per the
+assignment: ``input_specs()`` supplies precomputed frame embeddings
+(B, encoder_len, d_model).  Encoder: bidirectional self-attention,
+learned positions, LayerNorm+GELU.  Decoder: causal self-attention +
+cross-attention over the encoder memory; decode shapes use a
+self-attention KV ring cache of the given length plus per-layer cached
+cross K/V (enc-dec semantics, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, nn, transformer
+from repro.models.config import ModelConfig
+from repro.models.nn import ParamSpec
+
+
+def _stack(spec: ParamSpec, n: int) -> ParamSpec:
+    return ParamSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale, spec.dtype)
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"attn": transformer.attn_specs(cfg), "mlp": transformer.mlp_specs(cfg)}
+    s.update(transformer.norm_specs(cfg, "norm1"))
+    s.update(transformer.norm_specs(cfg, "norm2"))
+    return s
+
+
+def _dec_layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    s: Dict[str, Any] = {
+        "attn": transformer.attn_specs(cfg),
+        "cross": transformer.attn_specs(cfg),
+        "mlp": transformer.mlp_specs(cfg),
+    }
+    for name in ("norm1", "norm_cross", "norm2"):
+        s.update(transformer.norm_specs(cfg, name))
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab_in", "embed"), "embed"),
+        "enc_pos": ParamSpec((cfg.encoder_len, d), (None, "embed"), "embed"),
+        "enc_layers": jax.tree.map(
+            lambda s: _stack(s, cfg.encoder_layers), _enc_layer_specs(cfg), is_leaf=nn.is_spec
+        ),
+        "dec_layers": jax.tree.map(
+            lambda s: _stack(s, cfg.n_layers), _dec_layer_specs(cfg), is_leaf=nn.is_spec
+        ),
+    }
+    specs.update(transformer.norm_specs(cfg, "enc_final"))
+    specs.update(transformer.norm_specs(cfg, "final"))
+    return specs
+
+
+def _norm(cfg, x, p, name):
+    return transformer._norm(cfg, x, p, name)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, encoder_len, d) stub embeddings -> encoder memory."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dtype) + params["enc_pos"].astype(dtype)[None]
+
+    def body(h, lp):
+        hn = _norm(cfg, h, lp, "norm1")
+        q, k, v = transformer._project_qkv(cfg, lp, hn)
+        o = attention.flash_attention(
+            q, k, v, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+        )
+        B, T = h.shape[:2]
+        h = h + nn.dense(o.reshape(B, T, -1), lp["attn"]["wo"])
+        h = h + transformer.mlp_block(cfg, lp, _norm(cfg, h, lp, "norm2"))
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _norm(cfg, x, params, "enc_final")
+
+
+def _cross_attend(cfg, lp, x, memory):
+    """Cross-attention of decoder states over encoder memory."""
+    B, T = x.shape[:2]
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    a = lp["cross"]
+    q = nn.dense(x, a["wq"]).reshape(B, T, hq, hd)
+    k = nn.dense(memory, a["wk"]).reshape(B, memory.shape[1], hk, hd)
+    v = nn.dense(memory, a["wv"]).reshape(B, memory.shape[1], hk, hd)
+    o = attention.flash_attention(
+        q, k, v, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+    )
+    return nn.dense(o.reshape(B, T, -1), a["wo"])
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, last_only: bool = False):
+    """Training/prefill: decoder over ``tokens`` with cross-attn on the
+    encoded ``frames``. Returns logits."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    memory = encode(cfg, params, frames)
+    x = params["embed"].astype(dtype)[tokens]
+    rope = nn.rope_freqs(cfg.hd, x.shape[1] + 1, cfg.rope_theta, dtype)
+
+    def body(h, lp):
+        a, _ = transformer.attn_block(cfg, lp, _norm(cfg, h, lp, "norm1"), rope)
+        h = h + a
+        h = h + _cross_attend(cfg, lp, _norm(cfg, h, lp, "norm_cross"), memory)
+        h = h + transformer.mlp_block(cfg, lp, _norm(cfg, h, lp, "norm2"))
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    if last_only:
+        x = x[:, -1:]
+    x = _norm(cfg, x, params, "final")
+    return nn.shard_activation(nn.dense(x, params["embed"].T), ("batch", None, "vocab"))  # tied
+
+
+def decode_step(cfg: ModelConfig, params, tokens, self_cache, cross_kv):
+    """One-token decode. self_cache: (k, v) stacked (L, B, S, HK, hd);
+    cross_kv: (k, v) stacked (L, B, enc_len, HK, hd) cached at prefill."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    S = self_cache[0].shape[2]
+    rope = nn.rope_freqs(cfg.hd, S + 1, cfg.rope_theta, dtype)
+
+    def body(h, inp):
+        lp, kc, vc, ck, cv = inp
+        a, new_kv = transformer.attn_block_decode(
+            cfg, lp, _norm(cfg, h, lp, "norm1"), rope, (kc, vc)
+        )
+        h = h + a
+        hn = _norm(cfg, h, lp, "norm_cross")
+        B = h.shape[0]
+        q = nn.dense(hn, lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        o = attention.flash_attention(
+            q, ck, cv, causal=False, q_chunk=1, kv_chunk=cfg.kv_chunk
+        )
+        h = h + nn.dense(o.reshape(B, 1, -1), lp["cross"]["wo"])
+        h = h + transformer.mlp_block(cfg, lp, _norm(cfg, h, lp, "norm2"))
+        return h, new_kv
+
+    x, new_kv = jax.lax.scan(
+        body, x, (params["dec_layers"],) + tuple(self_cache) + tuple(cross_kv)
+    )
+    x = _norm(cfg, x, params, "final")
+    return nn.dense(x, params["embed"].T), new_kv

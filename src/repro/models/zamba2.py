@@ -1,0 +1,169 @@
+"""Zamba2 hybrid: Mamba2 backbone + a single *shared* attention block
+applied every ``shared_attn_every`` layers (the Zamba parameter-sharing
+trick — one set of attention+MLP weights reused at each application).
+
+Layer layout for n_layers = G * every + tail:  scan over G groups of
+(every-1 Mamba2 layers + shared attn application), then a tail scan of
+``tail`` Mamba2 layers.  The shared attention uses a sliding window
+(cfg.window) so the long_500k decode cell stays sub-quadratic
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2, nn, transformer
+from repro.models.config import ModelConfig
+from repro.models.nn import ParamSpec
+
+
+def _stack(spec: ParamSpec, dims: Tuple[int, ...], names) -> ParamSpec:
+    return ParamSpec(
+        tuple(dims) + spec.shape, tuple(names) + spec.axes, spec.init, spec.scale, spec.dtype
+    )
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    every = cfg.shared_attn_every
+    groups = cfg.n_layers // every
+    tail = cfg.n_layers - groups * every
+    return groups, every - 1, tail  # groups x (m mamba + attn), tail mamba
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    groups, per_group, tail = _layout(cfg)
+    m_spec = {
+        **mamba2.mamba2_specs(cfg),
+        "norm_in": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+    }
+    shared = {
+        "attn": transformer.attn_specs(cfg),
+        "mlp": transformer.mlp_specs(cfg),
+        "norm1_w": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+        "norm2_w": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+    }
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab_in", "embed"), "embed"),
+        "groups": jax.tree.map(
+            lambda s: _stack(s, (groups, per_group), ("layers", "layers_inner")),
+            m_spec,
+            is_leaf=nn.is_spec,
+        ),
+        "shared_attn": shared,
+        "final_w": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+    if tail:
+        specs["tail"] = jax.tree.map(
+            lambda s: _stack(s, (tail,), ("layers",)), m_spec, is_leaf=nn.is_spec
+        )
+    return specs
+
+
+def _mamba_layer(cfg, lp, x):
+    y, state = mamba2.mamba2_block(cfg, lp, nn.rms_norm(x, lp["norm_in"]))
+    return x + y, state
+
+
+def _shared_attn(cfg, sp, x, rope):
+    a, kv = transformer.attn_block(cfg, sp, nn.rms_norm(x, sp["norm1_w"]), rope,
+                                   window=cfg.window)
+    x = x + a
+    x = x + transformer.mlp_block(cfg, sp, nn.rms_norm(x, sp["norm2_w"]))
+    return x, kv
+
+
+def forward(cfg: ModelConfig, params, tokens, last_only: bool = False):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    T = x.shape[1]
+    rope = nn.rope_freqs(cfg.hd, T + 1, cfg.rope_theta, dtype)
+    groups, per_group, tail = _layout(cfg)
+
+    def group_body(h, gp):
+        def inner(h2, lp):
+            h2, _ = _mamba_layer(cfg, lp, h2)
+            return h2, None
+
+        if cfg.remat != "none":  # nested: recompute per mamba layer, not
+            # per 5-layer group (SSD chunk tensors are ~0.5 GB each)
+            inner = jax.checkpoint(
+                inner, policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = jax.lax.scan(inner, h, gp)
+        h, _ = _shared_attn(cfg, params["shared_attn"], h, rope)
+        return h, None
+
+    body = group_body
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    if tail:
+        def tail_body(h, lp):
+            h, _ = _mamba_layer(cfg, lp, h)
+            return h, None
+
+        if cfg.remat != "none":
+            tail_body = jax.checkpoint(tail_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    if last_only:
+        x = x[:, -1:]
+    x = nn.rms_norm(x, params["final_w"])
+    return nn.shard_activation(nn.dense(x, params["lm_head"]), ("batch", None, "vocab"))
+
+
+def init_state(cfg: ModelConfig, batch: int, window_cache: int):
+    """Decode state: per-mamba-layer SSD states + shared-attn window KV."""
+    groups, per_group, tail = _layout(cfg)
+    d_in = cfg.ssm_expand * cfg.d_model
+    H, P, N = d_in // 64, 64, cfg.ssm_state
+    hk, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "ssm_groups": jnp.zeros((groups, per_group, batch, H, P, N), jnp.float32),
+        "ssm_tail": jnp.zeros((tail, batch, H, P, N), jnp.float32),
+        "attn_k": jnp.zeros((batch, window_cache, hk, hd), jnp.dtype(cfg.compute_dtype)),
+        "attn_v": jnp.zeros((batch, window_cache, hk, hd), jnp.dtype(cfg.compute_dtype)),
+    }
+
+
+def decode(cfg: ModelConfig, params, tokens, state, pos):
+    """One-token decode. state: see init_state. pos: current position."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    rope = nn.rope_freqs(cfg.hd, int(state["attn_k"].shape[1]) + 1, cfg.rope_theta, dtype)
+    groups, per_group, tail = _layout(cfg)
+
+    def group_body(h, inp):
+        gp, st = inp
+
+        def inner(h2, inp2):
+            lp, s2 = inp2
+            y, s_new = mamba2.mamba2_decode(cfg, lp, nn.rms_norm(h2, lp["norm_in"]), s2)
+            return h2 + y, s_new
+
+        h, st_new = jax.lax.scan(inner, h, (gp, st))
+        sp = params["shared_attn"]
+        a, kv = transformer.attn_block_decode(
+            cfg, sp, nn.rms_norm(h, sp["norm1_w"]), rope,
+            (state["attn_k"], state["attn_v"]), window=cfg.window,
+        )
+        h = h + a
+        h = h + transformer.mlp_block(cfg, sp, nn.rms_norm(h, sp["norm2_w"]))
+        return h, st_new
+
+    x, ssm_groups = jax.lax.scan(group_body, x, (params["groups"], state["ssm_groups"]))
+    ssm_tail = state["ssm_tail"]
+    if tail:
+        def tail_body(h, inp2):
+            lp, s2 = inp2
+            y, s_new = mamba2.mamba2_decode(cfg, lp, nn.rms_norm(h, lp["norm_in"]), s2)
+            return h + y, s_new
+
+        x, ssm_tail = jax.lax.scan(tail_body, x, (params["tail"], state["ssm_tail"]))
+    x = nn.rms_norm(x, params["final_w"])
+    logits = nn.dense(x, params["lm_head"])
+    # slide the shared window cache by one (ring-buffer style shift)
+    new_state = dict(state, ssm_groups=ssm_groups, ssm_tail=ssm_tail)
+    return logits, new_state

@@ -1,0 +1,96 @@
+"""Pure-pytree optimizers (no external deps): SGD, AdamW, and the
+Langevin (QLSD*) update used by the Bayesian-FL application.
+
+API mirrors optax:  opt.init(params) -> state;
+opt.update(grads, state, params) -> (updates, state).  Updates are
+*added* to params.  All states inherit the params' sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Any
+    update: Any
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return (jax.tree.map(jnp.zeros_like, params),)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), ()
+        (mu,) = state
+        mu = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+        return jax.tree.map(lambda m: -lr * m, mu), (mu,)
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return (zeros(), zeros(), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        m, v, count = state
+        count = count + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), m, grads)
+        v = jax.tree.map(
+            lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)), v, grads
+        )
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(mi, vi, p):
+            step = (mi / c1) / (jnp.sqrt(vi / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        return jax.tree.map(upd, m, v, params), (m, v, count)
+
+    return Optimizer(init, update)
+
+
+def langevin(gamma: float) -> Optimizer:
+    """Stochastic Langevin update  theta <- theta - gamma*g + sqrt(2 gamma) Z.
+    The noise is injected by the *compressor* when an AINQ mechanism with
+    sigma^2 = 2/gamma is active (paper App. 2 / QLSD*); this optimizer only
+    applies the deterministic part."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree.map(lambda g: -gamma * g, grads), ()
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "langevin":
+        return langevin(lr)
+    raise KeyError(name)

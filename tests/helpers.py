@@ -1,0 +1,22 @@
+import math
+
+import numpy as np
+
+
+def ks_statistic(samples, cdf):
+    """Two-sided KS statistic of samples against a cdf callable."""
+    s = np.sort(np.asarray(samples, np.float64))
+    n = len(s)
+    c = cdf(s)
+    return max(
+        float(np.max(np.abs(c - np.arange(1, n + 1) / n))),
+        float(np.max(np.abs(c - np.arange(n) / n))),
+    )
+
+
+def norm_cdf(x, sigma=1.0):
+    return 0.5 * (1.0 + np.vectorize(math.erf)(np.asarray(x) / (sigma * math.sqrt(2))))
+
+
+def ks_threshold(n, alpha_like=0.001):
+    return 1.95 / np.sqrt(n)

@@ -1,0 +1,186 @@
+"""Unit tests: every AINQ mechanism produces its exact error law,
+homomorphic mechanisms decode from sums, and the communication bounds of
+Props. 1-2 hold."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding, decompose
+from repro.core.distributions import Gaussian, Laplace
+from repro.core.irwin_hall import IrwinHallMechanism, NormalizedIrwinHall
+from repro.core.layered import LayeredQuantizer
+from repro.core.mechanisms import get_mechanism
+from repro.core.sigm import SIGM
+
+from helpers import ks_statistic, ks_threshold, norm_cdf
+
+N_SAMPLES = 60_000
+
+
+def laplace_cdf(x, b):
+    x = np.asarray(x)
+    return np.where(x < 0, 0.5 * np.exp(x / b), 1 - 0.5 * np.exp(-x / b))
+
+
+@pytest.mark.parametrize("shifted", [False, True])
+@pytest.mark.parametrize("family", ["gaussian", "laplace"])
+def test_layered_quantizer_exact_error(shifted, family):
+    sigma = 1.3
+    dist = Gaussian(sigma) if family == "gaussian" else Laplace.from_std(sigma)
+    q = LayeredQuantizer(dist, shifted=shifted)
+    x = jnp.linspace(-9.0, 14.0, N_SAMPLES)  # arbitrary, non-random inputs
+    y, m, _ = q(jax.random.PRNGKey(0), x)
+    err = np.asarray(y - x)
+    if family == "gaussian":
+        ks = ks_statistic(err, lambda z: norm_cdf(z, sigma))
+    else:
+        ks = ks_statistic(err, lambda z: laplace_cdf(z, dist.scale))
+    assert ks < ks_threshold(N_SAMPLES), ks
+    assert abs(err.mean()) < 0.03 and abs(err.std() - sigma) < 0.03
+
+
+def test_layered_error_independent_of_input():
+    """AINQ: error distribution must not depend on x (compare two input
+    scales with the same keys)."""
+    q = LayeredQuantizer(Gaussian(1.0), shifted=True)
+    key = jax.random.PRNGKey(1)
+    for scale in (0.0, 1000.0):
+        x = scale * jnp.ones((N_SAMPLES,)) + jnp.linspace(0, 3, N_SAMPLES)
+        y, _, _ = q(key, x)
+        ks = ks_statistic(np.asarray(y - x), norm_cdf)
+        assert ks < ks_threshold(N_SAMPLES), (scale, ks)
+
+
+def test_shifted_supports_fixed_length(subtests=None):
+    """Prop. 2: minimal step + support bound; realized messages within."""
+    sigma, t = 0.7, 50.0
+    q = LayeredQuantizer(Gaussian(sigma), shifted=True)
+    assert np.isclose(q.dist.min_step_shifted, 2 * sigma * math.sqrt(math.log(4)))
+    x = jax.random.uniform(jax.random.PRNGKey(2), (N_SAMPLES,), minval=0, maxval=t)
+    _, m, _ = q(jax.random.PRNGKey(3), x)
+    supp = q.support_size(t)
+    # messages for inputs in [0, t] span at most supp distinct values
+    assert int(m.max() - m.min()) <= supp + 1
+    # Laplace closed form
+    ql = LayeredQuantizer(Laplace.from_std(sigma), shifted=True)
+    assert np.isclose(ql.dist.min_step_shifted, sigma * math.sqrt(2) * math.log(2))
+
+
+def test_direct_quantizer_unbounded_support():
+    with pytest.raises(ValueError):
+        LayeredQuantizer(Gaussian(1.0), shifted=False).support_size(8.0)
+
+
+def test_irwin_hall_mechanism_homomorphic_and_exact():
+    n, sigma, d = 12, 0.4, N_SAMPLES // 4
+    mech = IrwinHallMechanism(n, sigma)
+    key = jax.random.PRNGKey(4)
+    xs = jax.random.uniform(jax.random.PRNGKey(5), (n, d), minval=-3, maxval=3)
+    ss = jax.vmap(lambda k: mech.client_randomness(k, (d,)))(jax.random.split(key, n))
+    ms = jax.vmap(mech.encode)(xs, ss)
+    # homomorphic: decode needs only the SUMS
+    y = mech.decode_sum(ms.sum(0), ss.sum(0))
+    err = np.asarray(y - xs.mean(0))
+    ih = NormalizedIrwinHall(n)
+    # empirical var/support of IH(n, 0, sigma^2)
+    assert abs(err.std() - sigma) < 0.02
+    assert np.abs(err).max() <= sigma * math.sqrt(3 * n) + 1e-5
+    # error cdf matches the IH grid cdf
+    xs_grid = np.asarray(ih._xs64)
+    fs = np.asarray(ih._fs64)
+    cdf_half = np.concatenate([[0.0], np.cumsum((fs[1:] + fs[:-1]) / 2 * np.diff(xs_grid))])
+    grid = np.concatenate([-xs_grid[::-1], xs_grid[1:]])
+    cdfv = np.concatenate([0.5 - cdf_half[::-1], 0.5 + cdf_half[1:]])
+    scale = sigma * math.sqrt(12 * n) / 1.0
+
+    def ih_cdf(z):
+        return np.interp(np.asarray(z) / (sigma * math.sqrt(12 * n)), grid, cdfv)
+
+    assert ks_statistic(err, ih_cdf) < ks_threshold(d)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 40])
+def test_decompose_gaussian_mixture(n):
+    """A * IH + B ~ N(0,1) for the DECOMPOSE coupling (Prop. 3 core)."""
+    tabs = decompose.gaussian_tables(n)
+    K = 25_000
+    keys = jax.random.split(jax.random.PRNGKey(6), K)
+    A, B = jax.jit(jax.vmap(lambda k: decompose.decompose_gaussian(tabs, k)))(keys)
+    z = NormalizedIrwinHall(n).sample_unit(jax.random.PRNGKey(7), (K,))
+    out = np.asarray(A) * np.asarray(z) + np.asarray(B)
+    assert ks_statistic(out, norm_cdf) < ks_threshold(K)
+
+
+def test_aggregate_gaussian_exact_and_homomorphic():
+    n, sigma, d = 6, 0.8, 50_000
+    mech = get_mechanism("aggregate_gaussian", n, sigma, per_coord=True)
+    xs = jax.random.uniform(jax.random.PRNGKey(8), (n, d), minval=-5, maxval=5)
+    y, bits = mech.run(jax.random.PRNGKey(9), xs)
+    err = np.asarray(y - xs.mean(0))
+    assert ks_statistic(err, lambda z: norm_cdf(z, sigma)) < ks_threshold(d)
+    assert mech.homomorphic and bits < 32
+
+
+def test_sigm_exact_gaussian_wrt_subsampled_mean():
+    n, sigma, gamma, d = 10, 0.5, 0.6, 40_000
+    mech = SIGM(n, sigma, gamma)
+    xs = jax.random.uniform(jax.random.PRNGKey(10), (n, d), minval=-2, maxval=2)
+    shared = mech.shared_randomness(jax.random.PRNGKey(11), (d,))
+    ms = jnp.stack([mech.encode(xs[i], shared, i) for i in range(n)])
+    y = mech.decode(ms, shared)
+    sel = np.asarray(shared.select)
+    sub_mean = (np.asarray(xs) * sel).sum(0) / (gamma * n)
+    err = np.asarray(y) - sub_mean
+    nt = sel.sum(0)
+    err = err[nt > 0]  # AINQ wrt realized subsample; empty coords get fresh noise
+    assert ks_statistic(err, lambda z: norm_cdf(z, sigma)) < ks_threshold(len(err))
+
+
+def test_entropy_bounds_eq4_eq5():
+    """Eq. (4) lower and Eq. (5)/Prop. 1 upper bounds bracket H(M|S)."""
+    dist = Gaussian(1.0)
+    t = 64.0
+    h_d = coding.h_layer_direct(dist)
+    h_w = coding.h_layer_shifted(dist)
+    slack = 8 * math.log2(math.e) / t * dist.std
+    for shifted, h_layer in ((False, h_d), (True, h_w)):
+        q = LayeredQuantizer(dist, shifted=shifted)
+        h = coding.layered_entropy_mc(q, t, jax.random.PRNGKey(12), 40_000)
+        assert math.log2(t) + h_d - 0.05 <= h <= math.log2(t) + slack + h_layer + 0.05
+    # optimality gap of shifted <= (8 log e / t) sqrt(V) + 2   (Prop. 1)
+    assert h_w - h_d <= 2.0 + 1e-6
+
+
+def test_huffman_within_one_bit_of_entropy():
+    """Paper Sec. 3.2: Huffman on the message distribution achieves
+    H <= E[len] < H + 1 (and beats Elias gamma)."""
+    q = LayeredQuantizer(Gaussian(0.8), shifted=True)
+    x = jax.random.uniform(jax.random.PRNGKey(20), (40_000,), minval=0, maxval=24.0)
+    _, m, _ = q(jax.random.PRNGKey(21), x)
+    m_np = np.asarray(m)
+    vals, counts = np.unique(m_np, return_counts=True)
+    p = counts / counts.sum()
+    h = float(-(p * np.log2(p)).sum())
+    e_len = coding.huffman_expected_bits(m_np)
+    assert h - 1e-9 <= e_len < h + 1.0, (h, e_len)
+    elias = float(jnp.mean(coding.elias_gamma_bits(m)))
+    assert e_len <= elias + 1e-9
+
+
+@pytest.mark.parametrize("n", [2, 8, 64])
+def test_decompose_laplace_mixture(n):
+    """Aggregate LAPLACE mechanism (the paper's 'e.g. Gaussian or
+    Laplace'): A * IH(n) + B ~ Laplace(0, 1/sqrt(2)) (unit variance)."""
+    tabs = decompose.laplace_tables(n)
+    K = 25_000
+    keys = jax.random.split(jax.random.PRNGKey(30), K)
+    A, B = jax.jit(jax.vmap(lambda k: decompose.decompose_gaussian(tabs, k)))(keys)
+    z = NormalizedIrwinHall(n).sample_unit(jax.random.PRNGKey(31), (K,))
+    out = np.asarray(A) * np.asarray(z) + np.asarray(B)
+    b = 1.0 / math.sqrt(2.0)
+    ks = ks_statistic(out, lambda x: laplace_cdf(x, b))
+    assert ks < ks_threshold(K), ks
+    assert abs(out.std() - 1.0) < 0.03

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding, dither
+from repro.core.distributions import Gaussian, Laplace
+from repro.core.irwin_hall import IrwinHallMechanism
+from repro.core.layered import LayeredQuantizer
+from repro.kernels import ref
+
+F32 = st.floats(-1e4, 1e4, allow_nan=False, width=32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    x=st.lists(F32, min_size=1, max_size=64),
+    w=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dither_roundtrip_error_bounded(x, w, seed):
+    """|decode(encode(x)) - x| <= w/2 for any input, step, dither."""
+    xs = jnp.asarray(x, jnp.float32)
+    s = dither.dither_noise(jax.random.PRNGKey(seed), xs.shape)
+    m = dither.dither_encode(xs, w, s)
+    y = dither.dither_decode(m, w, s)
+    # f32 arithmetic: |x/w| can exceed 2^23, adding ulp-scale error
+    tol = w / 2 + 4.0 * 1.2e-7 * np.abs(np.asarray(xs)) + 1e-30
+    assert np.all(np.abs(np.asarray(y - xs)) <= tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    sigma=st.floats(1e-3, 1e2),
+    shifted=st.booleans(),
+    family=st.sampled_from(["gaussian", "laplace"]),
+    shift=st.floats(-1e3, 1e3, allow_nan=False),
+)
+def test_layered_error_shift_invariant(seed, sigma, shifted, family, shift):
+    """AINQ invariance: with the same shared randomness the error is
+    literally identical for x and x + k*step... more strongly, the error
+    is always within the sampled layer's interval."""
+    dist = Gaussian(sigma) if family == "gaussian" else Laplace.from_std(sigma)
+    q = LayeredQuantizer(dist, shifted=shifted)
+    key = jax.random.PRNGKey(seed)
+    x = jnp.asarray([0.0, 0.5, shift], jnp.float32)
+    rand = q.randomness(key, x.shape)
+    y = q.decode(q.encode(x, rand), rand)
+    err = np.asarray(y - x)
+    step, offset = q.step_offset(rand[1])
+    lo = np.asarray(offset - step / 2)
+    hi = np.asarray(offset + step / 2)
+    tol = np.maximum(1e-5 * np.maximum(np.abs(x), 1.0), 1e-6) + 1e-3 * step
+    assert np.all(err >= lo - tol) and np.all(err <= hi + tol)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 32),
+    data=st.lists(st.floats(-8, 8, width=32), min_size=2, max_size=16),
+)
+def test_irwin_hall_homomorphism(seed, n, data):
+    """Decoding the SUM of messages equals averaging individual decodes
+    (exact homomorphism, Def. 6)."""
+    mech = IrwinHallMechanism(n, sigma=0.3)
+    d = len(data)
+    xs = jnp.tile(jnp.asarray(data, jnp.float32), (n, 1))
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    ss = jnp.stack([mech.client_randomness(k, (d,)) for k in keys])
+    ms = jnp.stack([mech.encode(xs[i], ss[i]) for i in range(n)])
+    y_sum = mech.decode_sum(ms.sum(0), ss.sum(0))
+    per = (ms.astype(jnp.float32) - ss) * mech.w  # individual decodes
+    y_ind = per.mean(0)
+    np.testing.assert_allclose(np.asarray(y_sum), np.asarray(y_ind), rtol=0, atol=1e-2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bits=st.sampled_from([4, 8, 16]),
+    n=st.integers(1, 300),
+)
+def test_pack_unpack_bijective(seed, bits, n):
+    """Bit-packing is exactly invertible over the full signed range."""
+    rng = np.random.default_rng(seed)
+    g = 32 // bits
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    m = jnp.asarray(rng.integers(lo, hi + 1, size=(n, g, 7)), jnp.int32)
+    word = ref.pack_ref(m, bits)
+    back = ref.unpack_ref(word, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(m))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.floats(1.0, 1e5),
+    step=st.floats(1e-4, 1e4),
+    u=st.floats(0.0, 1.0, exclude_max=True),
+)
+def test_conditional_entropy_bounds(t, step, u):
+    """0 <= H(M|S=s) <= log2(t/step + 2) for the dithered quantizer."""
+    h = float(coding.dither_conditional_entropy(step, u, t))
+    assert h >= -1e-6
+    assert h <= math.log2(t / step + 2.0) + 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), sigma=st.floats(0.01, 10.0))
+def test_elias_gamma_vs_entropy(seed, sigma):
+    """Realized Elias-gamma bits are a valid code: >= H(M) entropy of the
+    empirical message distribution."""
+    q = LayeredQuantizer(Gaussian(sigma), shifted=True)
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (4000,), minval=0, maxval=8 * sigma)
+    _, m, _ = q(jax.random.fold_in(jax.random.PRNGKey(seed), 1), x)
+    bits = float(jnp.mean(coding.elias_gamma_bits(m)))
+    vals, counts = np.unique(np.asarray(m), return_counts=True)
+    p = counts / counts.sum()
+    entropy = float(-(p * np.log2(p)).sum())
+    assert bits >= entropy - 0.05

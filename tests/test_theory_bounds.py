@@ -1,0 +1,108 @@
+"""Numerical verification of the paper's theory: Thm 1 (complexity),
+Thm 2 (relative mixture entropy lower bound), Prop. 4 (SIGM DP/cost),
+and DP accounting."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decompose, privacy
+from repro.core.irwin_hall import NormalizedIrwinHall
+from repro.core.mechanisms import get_mechanism
+
+
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_theorem2_lower_bound_on_mixture_entropy(n):
+    """E[log2|A|] from the DECOMPOSE coupling must respect Thm 2:
+    h_M(Q||P) >= -(1-lam)(L f(0) + log2(e L (g(0)-lam f(0)) / (2(1-lam))))
+    and, by Prop. 5(4), be <= h(Q) - h(P)."""
+    tabs = decompose.gaussian_tables(n)
+    K = 20_000
+    keys = jax.random.split(jax.random.PRNGKey(0), K)
+    A, _ = jax.jit(jax.vmap(lambda k: decompose.decompose_gaussian(tabs, k)))(keys)
+    e_log_a = float(jnp.mean(jnp.log2(jnp.abs(A) + 1e-30)))
+
+    ih = NormalizedIrwinHall(n)
+    lam = tabs.lam
+    L = 2.0 * math.sqrt(3.0 * n)
+    f0 = ih.peak / ih.unit_scale  # unit-variance pdf at 0
+    g0 = 1.0 / math.sqrt(2 * math.pi)
+    if lam < 1.0 - 1e-9:
+        thm2 = -(1.0 - lam) * (
+            L * f0 + math.log2(math.e * L * max(g0 - lam * f0, 1e-12) / (2 * (1 - lam)))
+        )
+        # realized coupling is a valid witness: E[log A] >= Thm-2 bound - MC slack
+        assert e_log_a >= thm2 - 0.1, (e_log_a, thm2)
+    # upper bound via differential entropies: h(N(0,1)) - h(IH_unit) <= 0
+    # (Gaussian maximizes entropy at fixed variance) => E[log A] <= ~0
+    assert e_log_a <= 0.05, e_log_a
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_theorem1_communication_bound(n):
+    """Realized fixed-length bits conditional on A satisfy the Thm 1
+    structure: E[ceil(log2(t/(w|A|)+3))] within the derived bound."""
+    sigma, t = 1.0, 64.0
+    mech_n = get_mechanism("aggregate_gaussian", n, sigma)
+    from repro.core.aggregate import AggregateGaussianMechanism
+
+    m = AggregateGaussianMechanism(n, sigma)
+    keys = jax.random.split(jax.random.PRNGKey(1), 20_000)
+    tabs = m.tables
+    A, _ = jax.jit(jax.vmap(lambda k: decompose.decompose_gaussian(tabs, k)))(keys)
+    bits = np.ceil(np.log2(t / (m.w * np.abs(np.asarray(A))) + 3.0))
+    e_bits = bits.mean()
+    e_neg_log_a = float(np.mean(-np.log2(np.abs(np.asarray(A)) + 1e-30)))
+    ih = NormalizedIrwinHall(n)
+    # Thm 1: E bits <= E[-log A] + log(t / (2 sigma sqrt(3n)))
+    #        + (6 sigma sqrt(3n) log e / t) * E|Z_Q| / E|Z_P| + 1
+    bound = (
+        e_neg_log_a
+        + math.log2(t / (2 * sigma * math.sqrt(3 * n)))
+        + 6 * sigma * math.sqrt(3 * n) * math.log2(math.e) / t
+        * (math.sqrt(2 / math.pi) / ih.mean_abs_unit)
+        + 1.0
+    )
+    assert e_bits <= bound + 0.05, (e_bits, bound)
+
+
+def test_prop4_sigm_mse_bound():
+    """Prop. 4: E||Y - mean||^2 <= d c^2/(n gamma) + d sigma^2."""
+    from repro.core.sigm import SIGM
+
+    n, d, gamma, sigma = 64, 400, 0.5, 0.05
+    c = 0.5
+    xs = jax.random.uniform(jax.random.PRNGKey(2), (n, d), minval=-c, maxval=c)
+    mech = SIGM(n, sigma, gamma)
+    errs = []
+    for r in range(5):
+        sh = mech.shared_randomness(jax.random.fold_in(jax.random.PRNGKey(3), r), (d,))
+        ms = jnp.stack([mech.encode(xs[i], sh, i) for i in range(n)])
+        y = mech.decode(ms, sh)
+        errs.append(float(jnp.sum((y - xs.mean(0)) ** 2)))
+    bound = d * c**2 / (n * gamma) + d * sigma**2
+    assert np.mean(errs) <= bound * 1.1, (np.mean(errs), bound)
+
+
+def test_gaussian_dp_calibration_roundtrip():
+    eps, delta = 1.2, 1e-5
+    sigma = privacy.gaussian_sigma(eps, delta, sensitivity=2.0)
+    assert privacy.gaussian_epsilon(sigma, delta, sensitivity=2.0) == pytest.approx(eps)
+    # RDP conversion is within ~35% of the classical calibration here
+    eps_rdp = privacy.rdp_to_dp(sigma, delta, sensitivity=2.0)
+    assert eps_rdp < eps * 1.35
+
+
+def test_renyi_dp_monotone_in_alpha():
+    vals = [privacy.renyi_gaussian(a, sigma=1.0) for a in (1.5, 2.0, 8.0, 32.0)]
+    assert vals == sorted(vals)
+
+
+def test_lambda_monotone_to_one():
+    """As n grows, IH -> Gaussian so the exact component weight lam -> 1
+    and E[-log A] -> 0 (paper Fig. 4 asymptotics)."""
+    lams = [decompose.gaussian_ih_lambda(n) for n in (3, 8, 32, 128, 512)]
+    assert all(b >= a - 1e-6 for a, b in zip(lams, lams[1:])), lams
+    assert lams[-1] > 0.995

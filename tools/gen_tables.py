@@ -1,0 +1,49 @@
+"""Generate the EXPERIMENTS.md roofline + dryrun tables from artifacts."""
+import json
+import os
+import sys
+
+sys.path.insert(0, "/root/repo/src")
+sys.path.insert(0, "/root/repo")
+from repro import configs  # noqa: E402
+from benchmarks import analytic  # noqa: E402
+
+ART = "/root/repo/artifacts/dryrun"
+
+
+def rec(arch, shape, mp=False):
+    p = os.path.join(ART, f"{arch}_{shape}{'_mp' if mp else ''}.json")
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+print("## dryrun table")
+print("| arch | shape | mesh | compile_s | temp GB/chip | args GB/chip | HLO coll ops | HLO coll GB/iter |")
+print("|---|---|---|---|---|---|---|---|")
+for arch, shape, skip in configs.cells():
+    for mp in (False, True):
+        r = rec(arch, shape, mp)
+        if not r:
+            print(f"| {arch} | {shape} | {'2x16x16' if mp else '16x16'} | MISSING |||||")
+            continue
+        m = r["memory"]
+        print(f"| {arch} | {shape} | {r['mesh']} | {r['compile_s']} | "
+              f"{m['temp_size_in_bytes']/1e9:.2f} | {m['argument_size_in_bytes']/1e9:.2f} | "
+              f"{sum(r['collective_counts'].values())} | "
+              f"{sum(r['collective_bytes'].values())/1e9:.2f} |")
+
+print()
+print("## roofline table (single-pod 16x16, analytic per-chip models)")
+print("| arch | shape | compute s | memory s | collective s | bottleneck | MODEL/exec FLOPs |")
+print("|---|---|---|---|---|---|---|")
+worst = []
+for arch, shape, skip in configs.cells():
+    m = analytic.cell_model(arch, shape)
+    print(f"| {arch} | {shape} | {m.compute_s:.3g} | {m.memory_s:.3g} | "
+          f"{m.collective_s:.3g} | {m.bottleneck} | {m.useful_fraction:.2f} |")
+    dom = max(m.compute_s, m.memory_s, m.collective_s)
+    best = max(m.compute_s, m.memory_s, m.collective_s) and m.compute_s
+    worst.append((arch, shape, m.bottleneck, m.compute_s / dom))
+print()
+print("## roofline fraction (compute_term / dominant_term = fraction of peak if bottleneck were removed)")
+for a, s, b, f in sorted(worst, key=lambda x: x[3])[:6]:
+    print(f"  worst: {a} {s}: bottleneck={b}, compute/dominant={f:.3f}")
