@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt", default="artifacts/ckpt_example")
+    ap.add_argument("--per-coord", action="store_true",
+                    help="per-coordinate shared randomness (i.i.d. noise, "
+                         "required for DP; much slower on CPU)")
     args = ap.parse_args()
 
     # ~100M config: qwen1.5-0.5b family at 12 layers / d=768
@@ -45,13 +48,20 @@ def main():
 
     mesh = meshctx.default_mesh()
     meshctx.set_mesh(mesh)
+    n_pods = mesh.shape.get("pod", 1)
     comp = None
     if args.mechanism != "none":
+        # per_coord=False: one shared (A, B) draw per tensor instead of
+        # per coordinate — each coordinate's marginal noise is still
+        # exactly N(0, sigma^2) but coordinates are dependent, which is
+        # the cheap-RNG mode for a ~100M-param model on CPU.  Formal DP
+        # accounting needs per_coord=True (i.i.d. noise).
         comp = CompressionConfig(
-            mechanism=args.mechanism, sigma=args.sigma, clip=args.clip
+            mechanism=args.mechanism, sigma=args.sigma, clip=args.clip,
+            per_coord=args.per_coord,
         )
         print(f"compression: {args.mechanism}, sigma={args.sigma}, "
-              f"<= {message_bits(comp, 1):.1f} bits/coordinate on the wire")
+              f"<= {message_bits(comp, n_pods):.1f} bits/coordinate on the wire")
     tc = steps.TrainConfig(optimizer="adamw", lr=args.lr, grad_accum=2,
                            compression=comp)
 
@@ -76,8 +86,12 @@ def main():
             checkpoint.save(args.ckpt, i + 1, state)
     if comp is not None:
         eps = gaussian_epsilon(args.sigma, 1e-5, sensitivity=2 * args.clip)
+        caveat = ("" if args.per_coord else
+                  " [NOT a guarantee for this run: per-tensor randomness; "
+                  "rerun with --per-coord for i.i.d. noise]")
         print(f"per-step DP (trusted server, no amplification): "
-              f"eps={eps:.1f} @ delta=1e-5 — tune sigma/clip for your budget")
+              f"eps={eps:.1f} @ delta=1e-5 — tune sigma/clip for your "
+              f"budget{caveat}")
 
 
 if __name__ == "__main__":

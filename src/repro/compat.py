@@ -1,0 +1,73 @@
+"""Version-compat shims for jax APIs the repo uses.
+
+The codebase targets the current jax API surface (``jax.shard_map`` with
+``axis_names``/``check_vma``, ``pltpu.CompilerParams``); the container
+pins jax 0.4.37 where those names live elsewhere or are spelled
+differently.  Installing the shims once (from ``repro/__init__``) lets
+every module and test use the new spellings on both versions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def _shard_map_compat():
+    """jax.shard_map for jax<0.4.38.
+
+    Maps the modern signature onto ``jax.experimental.shard_map``:
+      * ``axis_names={...}`` (axes that become manual) -> ``auto`` =
+        the complement of ``axis_names`` in the mesh axes;
+      * ``check_vma`` -> ``check_rep``.
+    """
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f=None, /, *, mesh, in_specs, out_specs,
+                  axis_names=None, check_vma=None, check_rep=None,
+                  **kwargs: Any):
+        check = True
+        if check_vma is not None:
+            check = check_vma
+        elif check_rep is not None:
+            check = check_rep
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check, **kwargs)
+        if axis_names is not None:
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw["auto"] = auto
+        if f is None:
+            return lambda g: _legacy(g, **kw)
+        return _legacy(f, **kw)
+
+    return shard_map
+
+
+def pallas_tpu_compiler_params():
+    """CompilerParams class across the pltpu rename (TPUCompilerParams
+    in jax<=0.4.x, CompilerParams in newer releases)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    return cls if cls is not None else pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat()
+    if not hasattr(jax.lax, "axis_size"):
+        # psum of the literal 1 is special-cased to the (concrete) axis
+        # size on every jax version that lacks lax.axis_size
+        jax.lax.axis_size = lambda name: jax.lax.psum(1, name)
+    # jax.tree.{flatten,map,leaves}_with_path moved out of jax.tree_util
+    # only after 0.4.37
+    import jax.tree_util as tu
+
+    for name, legacy in (
+        ("flatten_with_path", tu.tree_flatten_with_path),
+        ("map_with_path", tu.tree_map_with_path),
+        ("leaves_with_path", tu.tree_leaves_with_path),
+    ):
+        if not hasattr(jax.tree, name):
+            setattr(jax.tree, name, legacy)

@@ -59,19 +59,35 @@ class AggregateGaussianMechanism:
         return gaussian_tables(self.n)
 
     # --- shared randomness -----------------------------------------------
-    def global_randomness(self, key, shape=()) -> AggGaussShared:
+    def global_randomness(self, key, shape=(), *, a_min=0.0) -> AggGaussShared:
         """T = (A, B); every client and the server derive this from the
-        common seed (replicated computation in SPMD)."""
+        common seed (replicated computation in SPMD).
+
+        ``a_min`` clamps the step scale A from below: the decompose law
+        puts ~1e-3 mass on A small enough that messages x/(A w) overflow
+        the int32 psum payload (error blow-ups of 100+ sigma observed).
+        Callers set a_min = t_range * n / (w * 2^30) so |sum_i M_i| stays
+        within int32; the induced deviation from the exact error law is
+        P[A < a_min] in total variation (clamped draws keep the exact
+        subtractive-dither uniform error at step a_min*w, shifted by the
+        jointly drawn B sigma — bounded, just not exactly Gaussian).
+        """
         tables = self.tables
         if self.per_coord and shape:
-            flat = int(jnp.prod(jnp.asarray(shape)))
+            flat = math.prod(shape)
             keys = jax.random.split(key, flat)
             A, B = jax.vmap(lambda k: decompose_gaussian(tables, k))(keys)
-            return AggGaussShared(A.reshape(shape), B.reshape(shape))
-        A, B = decompose_gaussian(tables, key)
-        return AggGaussShared(
-            jnp.broadcast_to(A, shape), jnp.broadcast_to(B, shape)
-        )
+            A, B = A.reshape(shape), B.reshape(shape)
+        else:
+            A, B = decompose_gaussian(tables, key)
+            A = jnp.broadcast_to(A, shape)
+            B = jnp.broadcast_to(B, shape)
+        return AggGaussShared(jnp.maximum(A, a_min), B)
+
+    def a_min_for_range(self, t_range, *, msg_bits: int = 30):
+        """Smallest safe A for inputs |x_i| <= t_range / 2: keeps the
+        *summed* message within a 2^msg_bits+ budget (int32 psum)."""
+        return t_range * self.n / (self.w * float(2**msg_bits))
 
     def client_randomness(self, key, shape=(), dtype=jnp.float32):
         """S_i ~ U(-1/2,1/2) per coordinate; key = fold_in(round_key, i)."""

@@ -106,28 +106,32 @@ def laplace_ih_lambda(n: int) -> float:
 
 
 class DecomposeTables(NamedTuple):
-    """Device-resident tables for the jittable decompose sampler."""
+    """Host-resident (numpy) tables for the jittable decompose sampler.
+
+    Kept as numpy on purpose: the constructors are lru_cached and may
+    first run inside an arbitrary trace (jit / vmap / shard_map) — jnp
+    constants built there would poison the cache with leaked tracers
+    (``ensure_compile_time_eval`` does not escape a ShardMapTrace on
+    jax<=0.4.x).  numpy constants are trace-proof and are promoted to
+    device constants at use."""
 
     n: int
     family: str
     lam: float
     L: float  # support width of unit-variance IH = 2 sqrt(3n)
     peak_norm: float  # f~(0) of the normalized ([-1/2,1/2]) IH
-    norm_xs: jnp.ndarray  # [0, 1/2] grid
-    norm_fs: jnp.ndarray  # f~ on grid
-    inv_y: jnp.ndarray  # increasing f~ values (reversed)
-    inv_x: jnp.ndarray  # matching x
-    psi_xs: jnp.ndarray
-    psi_inv_y: jnp.ndarray  # increasing psi values (reversed)
-    psi_inv_x: jnp.ndarray
+    norm_xs: np.ndarray  # [0, 1/2] grid
+    norm_fs: np.ndarray  # f~ on grid
+    inv_y: np.ndarray  # increasing f~ values (reversed)
+    inv_x: np.ndarray  # matching x
+    psi_xs: np.ndarray
+    psi_inv_y: np.ndarray  # increasing psi values (reversed)
+    psi_inv_x: np.ndarray
 
 
 @functools.lru_cache(maxsize=64)
 def gaussian_tables(n: int) -> DecomposeTables:
-    # eager construction even if first called under a jit trace — the
-    # lru_cache must never capture traced constants
-    with jax.ensure_compile_time_eval():
-        return _tables_eager(n, "gaussian")
+    return _tables_eager(n, "gaussian")
 
 
 @functools.lru_cache(maxsize=64)
@@ -135,26 +139,26 @@ def laplace_tables(n: int) -> DecomposeTables:
     """Aggregate LAPLACE mechanism tables — the paper's "e.g. Gaussian or
     Laplace" generality: decompose a unit-variance Laplace into a mixture
     of shifted/scaled Irwin-Hall."""
-    with jax.ensure_compile_time_eval():
-        return _tables_eager(n, "laplace")
+    return _tables_eager(n, "laplace")
 
 
 def _tables_eager(n: int, family: str) -> DecomposeTables:
     ih = NormalizedIrwinHall(n)
     lam, psi_xs, psi = _lambda_and_psi_grid(n, family)
+    f32 = lambda a: np.asarray(a, np.float32)  # noqa: E731
     return DecomposeTables(
         n=n,
         family=family,
         lam=float(lam),
         L=2.0 * math.sqrt(3.0 * n),
-        peak_norm=ih.peak,
-        norm_xs=ih.xs,
-        norm_fs=ih.fs,
-        inv_y=ih._inv_y,
-        inv_x=ih._inv_x,
-        psi_xs=jnp.asarray(psi_xs, jnp.float32),
-        psi_inv_y=jnp.asarray(psi[::-1].copy(), jnp.float32),
-        psi_inv_x=jnp.asarray(psi_xs[::-1].copy(), jnp.float32),
+        peak_norm=float(ih._fs64[0]),
+        norm_xs=f32(ih._xs64),
+        norm_fs=f32(ih._fs64),
+        inv_y=f32(ih._fs64[::-1]),
+        inv_x=f32(ih._xs64[::-1]),
+        psi_xs=f32(psi_xs),
+        psi_inv_y=f32(psi[::-1]),
+        psi_inv_x=f32(psi_xs[::-1]),
     )
 
 

@@ -145,7 +145,8 @@ class AggregateGaussianEstimator(MeanEstimator):
     def run(self, key, xs):
         mech = AggregateGaussianMechanism(self.n, self.sigma, self.per_coord)
         kt, ks = jax.random.split(key)
-        t = mech.global_randomness(kt, xs.shape[1:])
+        a_min = mech.a_min_for_range(2.0 * jnp.max(jnp.abs(xs)))
+        t = mech.global_randomness(kt, xs.shape[1:], a_min=a_min)
         keys = jax.random.split(ks, self.n)
         ss = jax.vmap(lambda k: mech.client_randomness(k, xs.shape[1:]))(keys)
         ms = jax.vmap(lambda x, s: mech.encode(x, s, t))(xs, ss)

@@ -1,0 +1,9 @@
+"""Distributed execution layer: mesh context, sharding rules, and the
+paper's compressed cross-client aggregation on a real mesh axis.
+
+Modules
+  meshctx  — process-global mesh (pod, data, model) + manual-axes state
+  sharding — logical-axis -> mesh-axis rule tables and resolvers
+  compress — CompressionConfig / compress_tree / message_bits: AINQ
+             mechanisms dispatched over the 'pod' (client) axis
+"""

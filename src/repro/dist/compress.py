@@ -1,0 +1,209 @@
+"""Compressed cross-client gradient aggregation on a mesh axis.
+
+This is the SPMD face of the paper's AINQ mechanisms: inside a
+``shard_map`` that is manual over the 'pod' (client) axis, every pod
+clips and encodes its gradient tree into integer messages, the messages
+are aggregated with an integer ``psum`` (the homomorphic /
+secure-aggregation-shaped collective), and every pod decodes the *sum* —
+so the aggregated error follows the mechanism's law exactly:
+
+  aggregate_gaussian — N(0, sigma^2) exactly (paper Prop. 3)
+  irwin_hall         — IH(n, 0, sigma^2) exactly (Sec. 4.2)
+  layered_shifted    — per-client N(0, n sigma^2) decoded locally and
+                       pmean'd -> N(0, sigma^2) exactly (Def. 5; not
+                       homomorphic: the collective carries floats)
+  layered_direct     — as above with the direct layering (Def. 4)
+  none_              — clip + pmean (no quantization)
+
+Shared randomness is derived from one replicated per-round key: the
+global (A, B) draw uses it directly, client i's dither uses
+``fold_in(key, i)`` with i = the pod's ``axis_index``, and the decode
+recomputes every client's dither from the same seed — only integers
+ever cross pods for the homomorphic mechanisms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, dither
+from repro.core.aggregate import AggregateGaussianMechanism
+from repro.core.distributions import Gaussian
+from repro.core.irwin_hall import IrwinHallMechanism
+from repro.core.layered import LayeredQuantizer
+
+PyTree = Any
+
+MECHANISMS = (
+    "none_",
+    "aggregate_gaussian",
+    "irwin_hall",
+    "layered_shifted",
+    "layered_direct",
+)
+
+_MSG_DTYPES = {"int32": jnp.int32, "int16": jnp.int16, "int8": jnp.int8}
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Cross-client compression for the training hot path.
+
+    mechanism: one of MECHANISMS.
+    sigma:     std of the *aggregated* error.
+    clip:      per-coordinate clip applied to each client's gradient
+               before encoding (also the DP sensitivity knob).
+    msg_dtype: integer payload of the cross-pod psum ("int32"/"int16"/
+               "int8"); narrower payloads shrink the collective but can
+               wrap for tiny shared steps — a dry-run/roofline knob.
+    per_coord: one (A, B) shared draw per coordinate (paper-faithful,
+               i.i.d. noise, required for DP and the KS tests) vs one
+               per tensor (cheaper RNG, coordinates dependent).
+    """
+
+    mechanism: str = "aggregate_gaussian"
+    sigma: float = 1e-4
+    clip: float = 1.0
+    msg_dtype: str = "int32"
+    per_coord: bool = True
+
+    def __post_init__(self):
+        if self.mechanism not in MECHANISMS:
+            raise KeyError(
+                f"unknown mechanism {self.mechanism!r}; have {MECHANISMS}"
+            )
+        if self.mechanism != "none_" and not self.sigma > 0.0:
+            raise ValueError(f"sigma must be > 0, got {self.sigma}")
+        if self.msg_dtype not in _MSG_DTYPES:
+            raise KeyError(f"msg_dtype {self.msg_dtype!r} not in {_MSG_DTYPES}")
+
+
+def _client_index(axis: Optional[str]):
+    return jax.lax.axis_index(axis) if axis is not None else 0
+
+
+def _dither_sum(ks, n: int, shape) -> jnp.ndarray:
+    """sum_j S_j recomputed from the shared seed (every pod holds the
+    round key, so no float collective is needed for the dither sum)."""
+    s = jnp.zeros(shape, jnp.float32)
+    for j in range(n):
+        s = s + dither.dither_noise(jax.random.fold_in(ks, j), shape)
+    return s
+
+
+def _psum_msg(m, comp: CompressionConfig, axis: Optional[str]):
+    m = m.astype(_MSG_DTYPES[comp.msg_dtype])
+    if axis is not None:
+        m = jax.lax.psum(m, axis)
+    return m.astype(jnp.int32)
+
+
+def _compress_leaf(x, comp: CompressionConfig, key, axis: Optional[str],
+                   n: int):
+    dtype = x.dtype
+    x32 = jnp.clip(x.astype(jnp.float32), -comp.clip, comp.clip)
+    shape = x32.shape
+
+    if comp.mechanism == "none_":
+        y = jax.lax.pmean(x32, axis) if axis is not None else x32
+        return y.astype(dtype)
+
+    kt, ks = jax.random.split(key)
+    idx = _client_index(axis)
+
+    if comp.mechanism == "aggregate_gaussian":
+        mech = AggregateGaussianMechanism(n, comp.sigma, comp.per_coord)
+        # replicated computation (shared key); A clamped so the summed
+        # int32 messages cannot overflow for inputs in [-clip, clip]
+        t = mech.global_randomness(
+            kt, shape, a_min=mech.a_min_for_range(2.0 * comp.clip)
+        )
+        s_i = mech.client_randomness(jax.random.fold_in(ks, idx), shape)
+        m_sum = _psum_msg(mech.encode(x32, s_i, t), comp, axis)
+        s_sum = _dither_sum(ks, n, shape) if axis is not None else s_i
+        return mech.decode_sum(m_sum, s_sum, t).astype(dtype)
+
+    if comp.mechanism == "irwin_hall":
+        mech = IrwinHallMechanism(n, comp.sigma)
+        s_i = mech.client_randomness(jax.random.fold_in(ks, idx), shape)
+        m_sum = _psum_msg(mech.encode(x32, s_i), comp, axis)
+        s_sum = _dither_sum(ks, n, shape) if axis is not None else s_i
+        return mech.decode_sum(m_sum, s_sum).astype(dtype)
+
+    if comp.mechanism in ("layered_shifted", "layered_direct"):
+        # point-to-point AINQ per client (per-client noise N(0, n s^2)
+        # averages to N(0, s^2)); decode locally, average the floats.
+        q = LayeredQuantizer(
+            Gaussian(comp.sigma * math.sqrt(n)),
+            shifted=comp.mechanism == "layered_shifted",
+        )
+        rand = q.randomness(jax.random.fold_in(ks, idx), shape)
+        y = q.decode(q.encode(x32, rand), rand)
+        if axis is not None:
+            y = jax.lax.pmean(y, axis)
+        return y.astype(dtype)
+
+    raise KeyError(comp.mechanism)
+
+
+def compress_tree(grads: PyTree, comp: CompressionConfig, key,
+                  axis: Optional[str] = None, n_clients: int = 1) -> PyTree:
+    """Compress-aggregate a gradient tree across ``axis``.
+
+    Inside a shard_map manual over ``axis`` each caller holds its own
+    client's gradients; the return value is the across-clients mean plus
+    the mechanism's exact noise, identical on every client.  With
+    ``axis=None`` (n_clients=1) this is the point-to-point mechanism:
+    quantize + exact noise, no collective.
+    """
+    n = max(int(n_clients), 1)
+    leaves, treedef = jax.tree.flatten(grads)
+    out = [
+        _compress_leaf(g, comp, jax.random.fold_in(key, i), axis, n)
+        for i, g in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------- bit accounting
+def message_bits(comp: CompressionConfig, n_clients: int, *,
+                 num_samples: int = 8192) -> float:
+    """Per-coordinate message size (bits) one client sends per round,
+    for inputs clipped to [-clip, clip].
+
+    Fixed-length mechanisms report their exact code size; the
+    variable-length ones (aggregate_gaussian, layered_direct) report the
+    expected Elias-gamma length (Sec. 5.2) over a deterministic
+    Monte-Carlo draw of the shared randomness and uniform inputs.
+    """
+    n = max(int(n_clients), 1)
+    t = 2.0 * comp.clip
+    if comp.mechanism == "none_":
+        return 32.0
+    if comp.mechanism == "irwin_hall":
+        return float(IrwinHallMechanism(n, comp.sigma).bits_fixed(t))
+    if comp.mechanism == "layered_shifted":
+        q = LayeredQuantizer(Gaussian(comp.sigma * math.sqrt(n)), shifted=True)
+        return float(q.fixed_bits(t))
+
+    key = jax.random.PRNGKey(0)
+    kx, kr = jax.random.split(key)
+    x = jax.random.uniform(
+        kx, (num_samples,), minval=-comp.clip, maxval=comp.clip
+    )
+    if comp.mechanism == "aggregate_gaussian":
+        mech = AggregateGaussianMechanism(n, comp.sigma, comp.per_coord)
+        tshared = mech.global_randomness(jax.random.fold_in(kr, 0), x.shape)
+        s = mech.client_randomness(jax.random.fold_in(kr, 1), x.shape)
+        m = mech.encode(x, s, tshared)
+    elif comp.mechanism == "layered_direct":
+        q = LayeredQuantizer(Gaussian(comp.sigma * math.sqrt(n)), shifted=False)
+        rand = q.randomness(kr, x.shape)
+        m = q.encode(x, rand)
+    else:
+        raise KeyError(comp.mechanism)
+    return float(jnp.mean(coding.elias_gamma_bits(m)))

@@ -1,0 +1,148 @@
+"""Logical-axis -> mesh-axis sharding rules and resolvers.
+
+Every parameter carries a tuple of *logical* axis names (see
+``repro.models.nn.ParamSpec.axes``); a rule table maps each logical name
+to zero or more *mesh* axes.  Resolution (``spec_for_axes``) is safe by
+construction: a mesh axis is applied only if it exists in the mesh, has
+size > 1, divides the dimension, and was not already used by an earlier
+dimension of the same tensor — otherwise that dimension silently stays
+replicated, so one rule table serves every architecture and mesh shape.
+
+Rule tables
+  PARAM_RULES          — training default: ZeRO/FSDP over 'data' on the
+                         embed dim, tensor parallelism over 'model'
+  EP_PARAM_RULES       — MoE expert parallelism: experts over 'model'
+                         (full d_ff per expert shard), FSDP kept
+  NO_FSDP_RULES        — model-only sharding; compressed multi-pod steps
+                         use this so per-pod gradient tensors are whole
+                         along the psum'd (integer message) dimension
+  SERVE_RESIDENT_RULES — serving: weights resident (no ZeRO gather),
+                         tensor parallelism only
+  ACT_RULES            — activation constraints (nn.shard_activation):
+                         batch over (pod, data), vocab/heads over 'model'
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import meshctx
+
+Rules = Tuple[Tuple[str, Union[None, str, Tuple[str, ...]]], ...]
+
+PARAM_RULES: Rules = (
+    ("layers", None),
+    ("embed", "data"),  # ZeRO/FSDP
+    ("heads", "model"),
+    ("kv", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("vocab_in", "model"),
+    ("expert", None),
+)
+
+EP_PARAM_RULES: Rules = (
+    ("layers", None),
+    ("embed", "data"),
+    ("heads", "model"),
+    ("kv", "model"),
+    ("mlp", None),  # full d_ff per expert shard
+    ("vocab", "model"),
+    ("vocab_in", "model"),
+    ("expert", "model"),  # experts over the model axis (all_to_all dispatch)
+)
+
+NO_FSDP_RULES: Rules = (
+    ("layers", None),
+    ("embed", None),
+    ("heads", "model"),
+    ("kv", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("vocab_in", "model"),
+    ("expert", None),
+)
+
+# Serving: same placement as NO_FSDP (resident weights, TP only) — a
+# distinct name because train-time gather_once and the serve launcher
+# key off it and may diverge from the compressed-train table later.
+SERVE_RESIDENT_RULES: Rules = NO_FSDP_RULES
+
+ACT_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("embed", None),
+    ("heads", "model"),
+    ("kv", "model"),
+    ("mlp", "model"),
+    ("vocab", "model"),
+    ("expert", None),
+)
+
+
+def _axes_tuple(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def spec_for_axes(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec under
+    ``rules``, applying only mesh axes that exist, have size > 1, divide
+    the dimension, and are unused so far in this spec."""
+    table = dict(rules)
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        picked, prod = [], 1
+        for a in _axes_tuple(table.get(name) if name is not None else None):
+            if (
+                a in mesh.axis_names
+                and mesh.shape[a] > 1
+                and a not in used
+                and dim % (prod * mesh.shape[a]) == 0
+            ):
+                picked.append(a)
+                prod *= mesh.shape[a]
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def _is_param_spec(x: Any) -> bool:
+    return hasattr(x, "axes") and hasattr(x, "shape") and hasattr(x, "init")
+
+
+def param_shardings(pspecs: Any, mesh: Mesh, rules: Rules) -> Any:
+    """NamedSharding tree for a ParamSpec tree under a rule table."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for_axes(s.axes, s.shape, mesh, rules)),
+        pspecs,
+        is_leaf=_is_param_spec,
+    )
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_dim: int) -> P:
+    """PartitionSpec for a batch-leading tensor: dim 0 over the largest
+    (pod, data) prefix dividing ``batch_dim``, other dims replicated."""
+    axes = meshctx.batch_axes(mesh, batch_dim)
+    first: Any = None
+    if len(axes) == 1:
+        first = axes[0]
+    elif axes:
+        first = axes
+    return P(first, *([None] * (ndim - 1)))

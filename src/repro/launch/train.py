@@ -43,6 +43,10 @@ def main():
     ap.add_argument("--mechanism", default="none")
     ap.add_argument("--sigma", type=float, default=1e-4)
     ap.add_argument("--clip", type=float, default=1.0)
+    ap.add_argument("--per-coord", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="per-coordinate shared randomness (paper-faithful "
+                         "i.i.d. noise); --no-per-coord draws per tensor")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--data", default="lm", choices=["lm", "uniform"])
@@ -62,7 +66,7 @@ def main():
     comp = None
     if args.mechanism != "none":
         comp = CompressionConfig(mechanism=args.mechanism, sigma=args.sigma,
-                                 clip=args.clip)
+                                 clip=args.clip, per_coord=args.per_coord)
     tc = steps.TrainConfig(optimizer="adamw", lr=args.lr,
                            grad_accum=args.grad_accum, compression=comp)
     state = steps.init_train_state(cfg, tc, jax.random.PRNGKey(0))

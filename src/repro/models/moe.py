@@ -84,7 +84,7 @@ def _local_moe(cfg: ModelConfig, x, router, w_gate, w_up, w_down):
 def moe_block(cfg: ModelConfig, layer_params, x):
     """shard_map wrapper: tokens stay on their data shard; d_ff is TP."""
     mesh = meshctx.get_mesh()
-    batch = meshctx.batch_axes(mesh)
+    batch = meshctx.batch_axes(mesh, x.shape[0])  # only axes dividing B
     mdl = meshctx.model_axis(mesh)
     m = layer_params["moe"]
 

@@ -175,32 +175,43 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh):
         )
 
     if comp is not None and has_pod:
-        # per-pod grads + compressed cross-pod aggregation, manual over
-        # 'pod' only (data/model stay under GSPMD inside).
-        def per_pod(state, batch, seed):
-            with meshctx.manual_axes({"pod"}):
-                loss, grads = grads_of(state["params"], batch)
-            key = jax.random.fold_in(jax.random.PRNGKey(seed), state["step"])
-            grads = compress_mod.compress_tree(
-                grads, comp, key, axis="pod", n_clients=n_clients
-            )
-            loss = jax.lax.pmean(loss, "pod")
-            return apply_update(state, grads, loss)
-
+        # Per-client (per-pod) grads via vmap over a leading client axis
+        # under plain GSPMD, then compressed cross-pod aggregation in a
+        # small fully-manual shard_map over the gradient leaves only.
+        # (Partially-manual shard_map around the whole backward — the
+        # obvious design — hard-crashes XLA <= 0.4.x when the body
+        # differentiates a scan: hlo_sharding_util IsManualSubgroup
+        # check; see repro.dist README.)
         def step(state, batch, seed):
-            fn = jax.shard_map(
-                per_pod,
+            def client_grads(mb):
+                with meshctx.manual_axes({"pod"}):
+                    # 'pod' is spoken for by the client axis: activation
+                    # constraints must not re-shard per-client batches
+                    # over it.
+                    return grads_of(state["params"], mb)
+
+            clients = {
+                k: v.reshape((n_clients, v.shape[0] // n_clients) + v.shape[1:])
+                for k, v in batch.items()
+            }
+            losses, grads = jax.vmap(client_grads)(clients)
+
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), state["step"])
+
+            def aggregate(g, k):
+                local = jax.tree.map(lambda t: t[0], g)  # this pod's client
+                return compress_mod.compress_tree(
+                    local, comp, k, axis="pod", n_clients=n_clients
+                )
+
+            grads = jax.shard_map(
+                aggregate,
                 mesh=mesh,
-                in_specs=(
-                    jax.tree.map(lambda _: P(), state),
-                    jax.tree.map(lambda _: P("pod"), batch),
-                    P(),
-                ),
-                out_specs=(jax.tree.map(lambda _: P(), state), {"loss": P()}),
-                axis_names={"pod"},
+                in_specs=(jax.tree.map(lambda _: P("pod"), grads), P()),
+                out_specs=jax.tree.map(lambda _: P(), grads),
                 check_vma=False,
-            )
-            return fn(state, batch, seed)
+            )(grads, key)
+            return apply_update(state, grads, jnp.mean(losses))
 
         return step
 

@@ -1,5 +1,15 @@
 import os
 import sys
 
+# Force a multi-device host platform BEFORE jax initializes, so pod-axis
+# tests exercise real multi-device paths (matches the expectations of
+# repro.dist.meshctx.default_mesh; a 1-device run would silently skip
+# every cross-pod collective).
+_FORCE = "--xla_force_host_platform_device_count"
+if _FORCE not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} {_FORCE}=8".strip()
+    )
+
 sys.path.insert(0, os.path.dirname(__file__))  # tests/helpers.py
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg

@@ -4,7 +4,12 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (dev extra; see pyproject)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import coding, dither
 from repro.core.distributions import Gaussian, Laplace
