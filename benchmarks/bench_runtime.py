@@ -1,0 +1,113 @@
+"""Async runtime benchmark: rounds/sec and bits/round vs staleness
+bound and straggler fraction (ISSUE 6 acceptance grid).
+
+Grid: staleness bound in {0, 1, 4} x wall-clock straggler fraction in
+{0.0, 0.3}, quadratic workload (d = 4096, 8 clients, thread transport,
+aggregate_gaussian per-tensor).  The round timeout is shorter than the
+straggler delay, so a straggling client misses its round's deadline and
+its update lands in a LATER round: at bound 0 it is rejected (occupancy
+drops), at bound >= 1 it is accepted stale and down-weighted — the
+trade the benchmark quantifies.
+
+    PYTHONPATH=src python -m benchmarks.bench_runtime --out BENCH_runtime.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.fl.federated import FLConfig
+from repro.runtime import AsyncFederatedRuntime, QuadraticWorkload, RuntimeConfig
+from repro.runtime import protocol
+
+STALENESS_BOUNDS = (0, 1, 4)
+STRAGGLER_FRACTIONS = (0.0, 0.3)
+
+N_CLIENTS = 8
+DIM = 4096
+ROUNDS = 12
+
+
+def run_cell(bound: int, straggler: float, *, rounds: int = ROUNDS) -> dict:
+    fl = FLConfig(
+        n_clients=N_CLIENTS, mechanism="aggregate_gaussian", sigma=1e-3,
+        clip=2.0, lr=0.3, seed=17,
+        mech_kwargs=(("per_coord", False),),
+    )
+    rc = RuntimeConfig(
+        fl=fl, staleness_bound=bound, staleness_weighting="inverse",
+        quorum=0.6, round_timeout_s=0.3, poll_interval_s=0.002,
+        transport="thread",
+        straggler_fraction=straggler, straggler_delay_s=0.6,
+    )
+    wl = QuadraticWorkload(N_CLIENTS, DIM, seed=17)
+    rt = AsyncFederatedRuntime(rc, wl)
+    # warm the jitted encode/decode cache before the clock starts — a
+    # cold compile (~1s) would otherwise eat the first rounds' 0.3s
+    # timeouts and read as runtime slowness
+    key = protocol.round_key(fl.seed, 0)
+    x = np.zeros(DIM, np.float32)
+    msgs = np.stack([rt.proto.client_message(key, N_CLIENTS, p, x)
+                     for p in range(N_CLIENTS)])
+    rt.proto.decode(key, N_CLIENTS, msgs, np.ones(N_CLIENTS, bool))
+    _, summary, _ = rt.run(wl.init_params(), rounds)
+    return summary
+
+
+def run(emit) -> None:
+    """benchmarks.run entry: one CSV row per grid cell."""
+    for bound in STALENESS_BOUNDS:
+        for straggler in STRAGGLER_FRACTIONS:
+            s = run_cell(bound, straggler, rounds=6)
+            tag = f"runtime/s{bound}_f{straggler}"
+            emit(f"{tag}_rounds_per_sec", round(s["rounds_per_sec"], 3),
+                 f"occupancy={s['mean_cohort_occupancy']:.2f}")
+            emit(f"{tag}_bits_per_round", round(s["bits_per_round"], 1),
+                 f"stale_used={s['stale_updates_used']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_runtime.json")
+    ap.add_argument("--rounds", type=int, default=ROUNDS)
+    args = ap.parse_args()
+
+    cells = []
+    for bound in STALENESS_BOUNDS:
+        for straggler in STRAGGLER_FRACTIONS:
+            s = run_cell(bound, straggler, rounds=args.rounds)
+            cells.append({
+                "staleness_bound": bound,
+                "straggler_fraction": straggler,
+                "rounds": s["rounds"],
+                "rounds_per_sec": s["rounds_per_sec"],
+                "bits_per_round": s["bits_per_round"],
+                "mean_round_latency_s": s["mean_round_latency_s"],
+                "mean_cohort_occupancy": s["mean_cohort_occupancy"],
+                "staleness_hist": s["staleness_hist"],
+                "stale_updates_used": s["stale_updates_used"],
+                "rejected_stale": s["rejected_stale"],
+                "bits_per_coord_analytic": s.get("bits_per_coord_analytic"),
+            })
+            print(f"bound={bound} straggler={straggler}: "
+                  f"{s['rounds_per_sec']:.2f} rounds/s, "
+                  f"{s['bits_per_round']:.0f} bits/round, "
+                  f"occupancy {s['mean_cohort_occupancy']:.2f}, "
+                  f"stale used {s['stale_updates_used']}")
+    out = {
+        "benchmark": "async_runtime",
+        "n_clients": N_CLIENTS,
+        "dim": DIM,
+        "mechanism": "aggregate_gaussian",
+        "transport": "thread",
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

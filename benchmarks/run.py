@@ -28,6 +28,7 @@ MODULES = [
     "fig6_ddg",
     "fig10_langevin",
     "table1_properties",
+    "bench_runtime",
     "roofline",
 ]
 

@@ -76,22 +76,31 @@ def main():
 
     t0 = time.time()
     first = int(state["step"])
+    min_cohort = None
     for i in range(first, first + args.steps):
         batch = synthetic.lm_batch(dc, i)
         state, m = step_fn(state, batch, jnp.int32(i))
+        # realized (post-straggler) cohort this step — the DP accounting
+        # below must use the worst (smallest) realized cohort, not the
+        # configured client count: with r < n participants the mean's
+        # per-client sensitivity grows to 2*clip/r.
+        realized = int(m["cohort"])
+        min_cohort = realized if min_cohort is None else min(min_cohort, realized)
         if i % 20 == 0 or i == first + args.steps - 1:
             tok_s = (i - first + 1) * args.batch * args.seq / (time.time() - t0)
-            print(f"step {i:5d}  loss {float(m['loss']):.4f}  ({tok_s:,.0f} tok/s)")
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
+                  f"cohort {realized}  ({tok_s:,.0f} tok/s)")
         if (i + 1) % 100 == 0:
             checkpoint.save(args.ckpt, i + 1, state)
     if comp is not None:
-        eps = gaussian_epsilon(args.sigma, 1e-5, sensitivity=2 * args.clip)
+        r = max(min_cohort or 1, 1)
+        eps = gaussian_epsilon(args.sigma, 1e-5, sensitivity=2 * args.clip / r)
         caveat = ("" if args.per_coord else
                   " [NOT a guarantee for this run: per-tensor randomness; "
                   "rerun with --per-coord for i.i.d. noise]")
-        print(f"per-step DP (trusted server, no amplification): "
-              f"eps={eps:.1f} @ delta=1e-5 — tune sigma/clip for your "
-              f"budget{caveat}")
+        print(f"per-step DP (trusted server, no amplification, worst "
+              f"realized cohort {r}): eps={eps:.1f} @ delta=1e-5 — tune "
+              f"sigma/clip for your budget{caveat}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dither
-from repro.core.decompose import DecomposeTables, decompose_gaussian, gaussian_tables
+from repro.core.decompose import (
+    DecomposeTables,
+    decompose_gaussian,
+    gaussian_tables,
+    laplace_tables,
+)
 
 __all__ = ["AggregateGaussianMechanism", "AggGaussShared"]
 
@@ -40,15 +45,33 @@ class AggGaussShared(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class AggregateGaussianMechanism:
-    """Aggregate AINQ mechanism with noise exactly N(0, sigma^2)."""
+    """Aggregate AINQ mechanism: noise exactly ~ Q with std sigma, for
+    Q the target ``family`` (the paper's "e.g. Gaussian or Laplace").
+
+    Only the DECOMPOSE target changes between families: (A, B) are drawn
+    so that A * IH + B follows the unit-variance target, and everything
+    downstream (dither step A*w, summed decode, bit accounting) is
+    target-agnostic.
+    """
 
     n: int
     sigma: float
     per_coord: bool = True
+    family: str = "gaussian"  # gaussian | laplace
 
     homomorphic = True
-    exact_gaussian = True
-    name = "aggregate_gaussian"
+
+    def __post_init__(self):
+        if self.family not in ("gaussian", "laplace"):
+            raise ValueError(f"unknown aggregate family {self.family!r}")
+
+    @property
+    def name(self) -> str:
+        return f"aggregate_{self.family}"
+
+    @property
+    def exact_gaussian(self) -> bool:
+        return self.family == "gaussian"
 
     @property
     def w(self) -> float:
@@ -56,6 +79,8 @@ class AggregateGaussianMechanism:
 
     @property
     def tables(self) -> DecomposeTables:
+        if self.family == "laplace":
+            return laplace_tables(self.n)
         return gaussian_tables(self.n)
 
     # --- shared randomness -----------------------------------------------

@@ -13,6 +13,7 @@ Table 1 of the paper, as code:
   individual-shifted   no           yes       yes       yes
   irwin-hall           yes          no        no        yes
   aggregate-gaussian   yes          yes       yes       no
+  aggregate-laplace    yes          no        no        no
   sigm                 no           yes       yes       yes
 """
 from __future__ import annotations
@@ -137,13 +138,21 @@ class AggregateGaussianEstimator(MeanEstimator):
     n: int
     sigma: float
     per_coord: bool = True
-    name = "aggregate_gaussian"
+    family: str = "gaussian"
     homomorphic = True
-    exact_gaussian = True
     fixed_length = False
 
+    @property
+    def name(self):
+        return f"aggregate_{self.family}"
+
+    @property
+    def exact_gaussian(self):
+        return self.family == "gaussian"
+
     def run(self, key, xs):
-        mech = AggregateGaussianMechanism(self.n, self.sigma, self.per_coord)
+        mech = AggregateGaussianMechanism(self.n, self.sigma, self.per_coord,
+                                          family=self.family)
         kt, ks = jax.random.split(key)
         a_min = mech.a_min_for_range(2.0 * jnp.max(jnp.abs(xs)))
         t = mech.global_randomness(kt, xs.shape[1:], a_min=a_min)
@@ -188,6 +197,9 @@ MECHANISMS: Dict[str, Callable[..., MeanEstimator]] = {
     "irwin_hall": lambda n, sigma, **kw: IrwinHallEstimator(n, sigma),
     "aggregate_gaussian": lambda n, sigma, **kw: AggregateGaussianEstimator(
         n, sigma, **kw
+    ),
+    "aggregate_laplace": lambda n, sigma, **kw: AggregateGaussianEstimator(
+        n, sigma, family="laplace", **kw
     ),
     "sigm": lambda n, sigma, **kw: SigmEstimator(n, sigma, **kw),
 }

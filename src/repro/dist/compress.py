@@ -8,6 +8,8 @@ secure-aggregation-shaped collective), and every pod decodes the *sum* —
 so the aggregated error follows the mechanism's law exactly:
 
   aggregate_gaussian — N(0, sigma^2) exactly (paper Prop. 3)
+  aggregate_laplace  — Laplace(0, sigma/sqrt(2)) exactly (same DECOMPOSE
+                       machinery with the Laplace target tables)
   irwin_hall         — IH(n, 0, sigma^2) exactly (Sec. 4.2)
   layered_shifted    — per-client N(0, n sigma^2) decoded locally and
                        pmean'd -> N(0, sigma^2) exactly (Def. 5; not
@@ -41,6 +43,7 @@ PyTree = Any
 MECHANISMS = (
     "none_",
     "aggregate_gaussian",
+    "aggregate_laplace",
     "irwin_hall",
     "layered_shifted",
     "layered_direct",
@@ -115,8 +118,11 @@ def _compress_leaf(x, comp: CompressionConfig, key, axis: Optional[str],
     kt, ks = jax.random.split(key)
     idx = _client_index(axis)
 
-    if comp.mechanism == "aggregate_gaussian":
-        mech = AggregateGaussianMechanism(n, comp.sigma, comp.per_coord)
+    if comp.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
+        mech = AggregateGaussianMechanism(
+            n, comp.sigma, comp.per_coord,
+            family=comp.mechanism.removeprefix("aggregate_"),
+        )
         # replicated computation (shared key); A clamped so the summed
         # int32 messages cannot overflow for inputs in [-clip, clip]
         t = mech.global_randomness(
@@ -195,8 +201,11 @@ def message_bits(comp: CompressionConfig, n_clients: int, *,
     x = jax.random.uniform(
         kx, (num_samples,), minval=-comp.clip, maxval=comp.clip
     )
-    if comp.mechanism == "aggregate_gaussian":
-        mech = AggregateGaussianMechanism(n, comp.sigma, comp.per_coord)
+    if comp.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
+        mech = AggregateGaussianMechanism(
+            n, comp.sigma, comp.per_coord,
+            family=comp.mechanism.removeprefix("aggregate_"),
+        )
         tshared = mech.global_randomness(jax.random.fold_in(kr, 0), x.shape)
         s = mech.client_randomness(jax.random.fold_in(kr, 1), x.shape)
         m = mech.encode(x, s, tshared)

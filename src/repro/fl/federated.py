@@ -1,4 +1,4 @@
-"""Federated-learning runtime at paper scale (explicit n-client rounds).
+"""Federated-learning loop at paper scale (explicit n-client rounds).
 
 This is the *algorithm-level* FL loop the paper's experiments use
 (mean estimation / FedSGD / QLSD over n clients), complementary to the
@@ -6,19 +6,45 @@ mesh-level integration in repro.dist.compress (where pods = clients).
 Supports cohort subsampling, straggler dropout (clients silently missing
 from a round — the mechanisms renormalize by the realized cohort), and
 any AINQ mechanism from the registry for update aggregation.
+
+Mechanisms with an integer wire format run through the message-level
+codec in ``repro.runtime.protocol`` — each cohort member encodes its own
+integer message and the server decodes the sum, exactly the computation
+the async actor/learner runtime (`repro.runtime`) distributes over a
+real transport.  The async runtime at staleness bound 0 therefore
+reproduces this loop bit-for-bit (pinned by tests/test_runtime.py).
+Mechanisms without one ("none", "sigm") keep the central
+`core.mechanisms` estimator path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mechanisms import MeanEstimator, get_mechanism
+from repro.core.mechanisms import get_mechanism
+from repro.runtime import protocol
 
 PyTree = Any
+
+
+def sample_cohort(n_clients: int, cohort_fraction: float,
+                  straggler_fraction: float, seed: int,
+                  rnd: int) -> np.ndarray:
+    """Deterministic per-round cohort: subsample clients, then drop
+    stragglers.  Shared by the synchronous loop and the async learner so
+    both announce identical cohorts for identical (seed, rnd)."""
+    rng = np.random.default_rng(seed * 100_003 + rnd)
+    sel = rng.random(n_clients) < cohort_fraction
+    # straggler mitigation: rounds proceed without slow clients
+    stragglers = rng.random(n_clients) < straggler_fraction
+    cohort = np.flatnonzero(sel & ~stragglers)
+    if cohort.size == 0:
+        cohort = np.array([rng.integers(n_clients)])
+    return cohort
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,17 +72,34 @@ class FederatedAveraging:
     def __init__(self, cfg: FLConfig, client_grad: Callable):
         self.cfg = cfg
         self.client_grad = client_grad
+        mech = protocol.canonical_mechanism(cfg.mechanism)
+        self.proto = None
+        if mech in protocol.PROTOCOL_MECHANISMS:
+            kw = dict(cfg.mech_kwargs)
+            self.proto = protocol.RoundProtocol(
+                mechanism=mech, sigma=cfg.sigma, clip=cfg.clip,
+                per_coord=bool(kw.get("per_coord", True)),
+            )
 
     def _cohort(self, rnd: int) -> np.ndarray:
         cfg = self.cfg
-        rng = np.random.default_rng(cfg.seed * 100_003 + rnd)
-        sel = rng.random(cfg.n_clients) < cfg.cohort_fraction
-        # straggler mitigation: rounds proceed without slow clients
-        stragglers = rng.random(cfg.n_clients) < cfg.straggler_fraction
-        cohort = np.flatnonzero(sel & ~stragglers)
-        if cohort.size == 0:
-            cohort = np.array([rng.integers(cfg.n_clients)])
-        return cohort
+        return sample_cohort(cfg.n_clients, cfg.cohort_fraction,
+                             cfg.straggler_fraction, cfg.seed, rnd)
+
+    def _aggregate(self, flat, key, n: int) -> Tuple[jnp.ndarray, float]:
+        """Mean update + exact noise from per-client flat grads, via the
+        integer message codec when the mechanism has one."""
+        cfg = self.cfg
+        if self.proto is not None:
+            msgs = np.stack([
+                self.proto.client_message(key, n, pos, x)
+                for pos, x in enumerate(flat)
+            ])
+            return self.proto.decode(key, n, msgs, np.ones(n, bool))
+        xs = jnp.clip(jnp.stack(flat), -cfg.clip, cfg.clip)
+        mech = get_mechanism(cfg.mechanism, n, cfg.sigma,
+                             **dict(cfg.mech_kwargs))
+        return mech.run(key, xs)
 
     def round(self, params: PyTree, rnd: int) -> Tuple[PyTree, Dict]:
         cfg = self.cfg
@@ -67,12 +110,8 @@ class FederatedAveraging:
             jnp.concatenate([g.reshape(-1) for g in jax.tree.leaves(t)])
             for t in grads
         ]
-        xs = jnp.clip(jnp.stack(flat), -cfg.clip, cfg.clip)
-        mech = get_mechanism(
-            cfg.mechanism, n, cfg.sigma, **dict(cfg.mech_kwargs)
-        )
-        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), rnd)
-        mean_update, bits = mech.run(key, xs)
+        key = protocol.round_key(cfg.seed, rnd)
+        mean_update, bits = self._aggregate(flat, key, n)
         # unflatten onto the param structure
         leaves = jax.tree.leaves(params)
         treedef = jax.tree.structure(params)

@@ -1,0 +1,59 @@
+"""Async actor/learner FL runtime with staleness-aware compressed
+aggregation.  See README.md in this directory.
+
+Import order matters: ``protocol`` is imported by ``repro.fl.federated``
+(the synchronous loop shares the message codec), and ``actors`` imports
+``repro.fl.federated`` back for cohort sampling — loading protocol first
+keeps the cycle one-directional at package-init time.
+"""
+from repro.runtime import protocol  # noqa: F401  (must precede actors)
+from repro.runtime.buffer import BufferStats, RoundBuffer  # noqa: F401
+from repro.runtime.messages import SHUTDOWN  # noqa: F401
+from repro.runtime.messages import ClientUpdate, RoundAnnounce  # noqa: F401
+from repro.runtime.monitor import Monitor, RoundRecord  # noqa: F401
+from repro.runtime.protocol import RoundProtocol  # noqa: F401
+from repro.runtime.transport import (  # noqa: F401
+    ClientEndpoint,
+    LearnerEndpoint,
+    ProcessTransport,
+    ThreadTransport,
+    TransportError,
+    make_transport,
+)
+
+from repro.runtime.actors import ClientSpec, Learner, run_client  # noqa: F401,E402
+from repro.runtime.runtime import (  # noqa: F401,E402
+    AsyncFederatedRuntime,
+    RuntimeConfig,
+    analytic_bits_per_coord,
+)
+from repro.runtime.workloads import (  # noqa: F401,E402
+    ModelGradWorkload,
+    QuadraticWorkload,
+)
+
+__all__ = [
+    "protocol",
+    "RoundProtocol",
+    "RoundAnnounce",
+    "ClientUpdate",
+    "SHUTDOWN",
+    "RoundBuffer",
+    "BufferStats",
+    "Monitor",
+    "RoundRecord",
+    "TransportError",
+    "ClientEndpoint",
+    "LearnerEndpoint",
+    "ThreadTransport",
+    "ProcessTransport",
+    "make_transport",
+    "ClientSpec",
+    "run_client",
+    "Learner",
+    "RuntimeConfig",
+    "AsyncFederatedRuntime",
+    "analytic_bits_per_coord",
+    "QuadraticWorkload",
+    "ModelGradWorkload",
+]

@@ -1,0 +1,219 @@
+"""Client actor and staleness-aware learner.
+
+Client actor (`run_client` — thread target or multiprocessing entry
+point): waits for a round announce, computes its local update on the
+announced params, encodes it to an integer message with the shared
+protocol, and sends it with bounded retry/backoff.  Wall-clock
+stragglers are simulated deterministically per (seed, client, round):
+a straggling client sleeps past the learner's round deadline, so its
+update arrives *late* and exercises the staleness path for real.
+
+Learner: per server round, announces the cohort (sampled with the same
+`fl.federated.sample_cohort` logic as the synchronous loop), polls the
+transport until quorum or timeout, buffers everything through the
+staleness-aware `RoundBuffer`, then aggregates the drained groups —
+each origin round decoded with ITS OWN round key and realized subset
+(homomorphic decode only combines messages that share a round's
+randomness), then combined across rounds with staleness weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Module-style import: repro.fl.federated itself imports
+# repro.runtime.protocol, so this module may load while federated is
+# still mid-import — attributes are resolved at call time, never here.
+import repro.fl.federated as federated
+from repro.runtime import protocol
+from repro.runtime.buffer import RoundBuffer
+from repro.runtime.messages import ClientUpdate, RoundAnnounce
+from repro.runtime.monitor import Monitor, RoundRecord
+from repro.runtime.transport import ClientEndpoint, TransportError
+
+__all__ = ["ClientSpec", "run_client", "Learner", "staleness_weight"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientSpec:
+    """Everything a client actor needs — picklable, so the same spec
+    drives a thread or a spawned process."""
+
+    client_id: int
+    seed: int
+    proto: protocol.RoundProtocol
+    workload: object  # .build() -> grad(flat_params, cid, rnd) -> flat np
+    max_retries: int = 3
+    retry_backoff_s: float = 0.01
+    straggler_fraction: float = 0.0
+    straggler_delay_s: float = 0.5
+    idle_timeout_s: float = 0.2
+
+
+def _is_straggler(spec: ClientSpec, rnd: int) -> bool:
+    if spec.straggler_fraction <= 0.0:
+        return False
+    rng = np.random.default_rng((spec.seed, spec.client_id, rnd))
+    return bool(rng.random() < spec.straggler_fraction)
+
+
+def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
+    grad = spec.workload.build()
+    while True:
+        ann = endpoint.recv_latest(timeout=spec.idle_timeout_s)
+        if ann is None:
+            continue
+        if ann.shutdown:
+            return
+        if spec.client_id not in ann.cohort:
+            continue
+        if _is_straggler(spec, ann.rnd):
+            time.sleep(spec.straggler_delay_s)
+        pos = ann.cohort.index(spec.client_id)
+        n = len(ann.cohort)
+        x = grad(ann.params, spec.client_id, ann.rnd)
+        key = protocol.round_key(spec.seed, ann.rnd)
+        upd = ClientUpdate(
+            client_id=spec.client_id,
+            origin_round=ann.rnd,
+            cohort_pos=pos,
+            payload=spec.proto.client_message(key, n, pos, x),
+            dither_seed=np.asarray(protocol.client_dither_key(key, n, pos)),
+            sent_at=time.time(),
+        )
+        for attempt in range(spec.max_retries + 1):
+            try:
+                endpoint.send(dataclasses.replace(upd, attempt=attempt))
+                break
+            except TransportError:
+                if attempt == spec.max_retries:
+                    break  # give up; the learner proceeds without us
+                time.sleep(spec.retry_backoff_s * (2.0 ** attempt))
+
+
+def staleness_weight(staleness: int, weighting: str) -> float:
+    if weighting == "uniform":
+        return 1.0
+    if weighting == "inverse":
+        return 1.0 / (1.0 + staleness)
+    raise KeyError(f"unknown staleness weighting {weighting!r}")
+
+
+class Learner:
+    """Server actor: drives rounds, owns the buffer and the params."""
+
+    def __init__(self, fl: federated.FLConfig, proto: protocol.RoundProtocol,
+                 endpoint, params0: np.ndarray, monitor: Monitor, *,
+                 staleness_bound: int = 0, staleness_weighting: str = "uniform",
+                 quorum: float = 1.0, round_timeout_s: float = 30.0,
+                 poll_interval_s: float = 0.002, buffer_capacity: int = 4096):
+        self.fl = fl
+        self.proto = proto
+        self.endpoint = endpoint
+        self.params = np.asarray(params0, np.float32)
+        self.monitor = monitor
+        self.staleness_weighting = staleness_weighting
+        self.quorum = quorum
+        self.round_timeout_s = round_timeout_s
+        self.poll_interval_s = poll_interval_s
+        self.buffer = RoundBuffer(staleness_bound, buffer_capacity)
+
+    # ------------------------------------------------------------ rounds
+    def _gather(self, rnd: int, need: int, deadline: float) -> None:
+        while time.monotonic() < deadline:
+            if self.buffer.count(rnd) >= need:
+                return
+            upd = self.endpoint.poll(
+                timeout=min(self.poll_interval_s,
+                            max(deadline - time.monotonic(), 1e-4))
+            )
+            if upd is not None:
+                self.buffer.offer(upd, server_round=rnd)
+
+    def _combine(self, rnd: int) -> Tuple[Optional[jnp.ndarray], Dict]:
+        """Decode each drained origin-round group with its own key and
+        realized subset, then staleness-weight across groups."""
+        groups = self.buffer.drain(rnd)
+        info: Dict = {"staleness_counts": {}, "used_total": 0,
+                      "realized_current": 0, "bits_total": 0.0}
+        ys, ws = [], []
+        for g, received in groups.items():
+            cohort = self.buffer.cohort_of(g)
+            n = len(cohort)
+            d = self.params.size
+            msgs = np.zeros((n, d), np.asarray(
+                next(iter(received.values())).payload).dtype)
+            mask = np.zeros(n, bool)
+            for pos, upd in received.items():
+                msgs[pos] = upd.payload
+                mask[pos] = True
+            y, bits = self.proto.decode(
+                protocol.round_key(self.fl.seed, g), n, msgs, mask)
+            s = rnd - g
+            ys.append(y)
+            ws.append(staleness_weight(s, self.staleness_weighting))
+            info["staleness_counts"][s] = len(received)
+            info["used_total"] += len(received)
+            info["bits_total"] += bits * d * len(received)
+            if s == 0:
+                info["realized_current"] = len(received)
+        if not ys:
+            return None, info
+        if len(ys) == 1:
+            # single group: no reweighting arithmetic — staleness 0 with
+            # a full cohort must reproduce the synchronous round bitwise
+            return ys[0], info
+        wsum = float(sum(ws))
+        acc = ws[0] * ys[0]
+        for w, y in zip(ws[1:], ys[1:]):
+            acc = acc + w * y
+        return acc / wsum, info
+
+    def step(self, rnd: int) -> RoundRecord:
+        fl = self.fl
+        t0 = time.monotonic()
+        cohort = tuple(
+            int(c) for c in federated.sample_cohort(
+                fl.n_clients, fl.cohort_fraction, fl.straggler_fraction,
+                fl.seed, rnd)
+        )
+        key = protocol.round_key(fl.seed, rnd)
+        self.buffer.register_round(
+            rnd, cohort, protocol.expected_dither_keys(key, len(cohort)))
+        rej0 = self.buffer.stats.rejected_stale
+        oth0 = (self.buffer.stats.rejected_unknown_round
+                + self.buffer.stats.rejected_bad_seed)
+        self.endpoint.broadcast(RoundAnnounce(rnd, cohort, self.params))
+        need = max(1, math.ceil(self.quorum * len(cohort)))
+        self._gather(rnd, need, t0 + self.round_timeout_s)
+        y, info = self._combine(rnd)
+        norm = 0.0
+        if y is not None:
+            self.params = np.asarray(
+                jnp.asarray(self.params) - self.fl.lr * y, np.float32)
+            norm = float(np.linalg.norm(np.asarray(y)))
+        rec = RoundRecord(
+            rnd=rnd,
+            latency_s=time.monotonic() - t0,
+            announced=len(cohort),
+            realized_current=info["realized_current"],
+            used_total=info["used_total"],
+            staleness_counts=info["staleness_counts"],
+            bits_total=info["bits_total"],
+            rejected_stale=self.buffer.stats.rejected_stale - rej0,
+            rejected_other=(self.buffer.stats.rejected_unknown_round
+                            + self.buffer.stats.rejected_bad_seed - oth0),
+            update_norm=norm,
+        )
+        self.monitor.emit(rec)
+        return rec
+
+    def run(self, n_rounds: int) -> np.ndarray:
+        for rnd in range(n_rounds):
+            self.step(rnd)
+        return self.params

@@ -1,0 +1,222 @@
+"""Message-level FL round protocol: the single codec shared by the
+synchronous loop (`repro.fl.federated.FederatedAveraging`) and the async
+actor/learner runtime (`repro.runtime.actors`).
+
+A round is identified by ``(seed, rnd)``; every party derives the round
+key ``fold_in(PRNGKey(seed), rnd)`` locally, so the only bytes a client
+ever uploads are the **integer** quantized message plus its dither seed
+(the exact shape ``repro.dist.compress`` produces inside a shard_map —
+here it crosses a real transport instead of a mesh axis):
+
+  key              = fold_in(PRNGKey(seed), rnd)
+  (kt, ks)         = split(key)           kt -> global (A, B) draw
+  ck[p]            = split(ks, n)[p]      client p's dither key
+  m_p              = mech.encode(clip(x_p), S(ck[p]), T(kt))   (ints)
+
+The server decodes the *sum* of whatever subset of the announced cohort
+actually reported (straggler renormalization: divide by the realized
+count r, not the announced n).  Because encode and decode live in one
+place, an async learner that gathers the full cohort reproduces the
+synchronous round bit-for-bit — the property the runtime tests pin.
+
+Supported mechanisms (`PROTOCOL_MECHANISMS`) are the integer-message
+ones; "none" and "sigm" have no integer wire format and stay on the
+central `core.mechanisms` path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coding
+from repro.core.aggregate import AggregateGaussianMechanism
+from repro.core.distributions import Gaussian
+from repro.core.irwin_hall import IrwinHallMechanism
+from repro.core.layered import LayeredQuantizer
+
+__all__ = [
+    "PROTOCOL_MECHANISMS",
+    "RoundProtocol",
+    "canonical_mechanism",
+    "round_key",
+    "client_dither_key",
+    "expected_dither_keys",
+]
+
+PROTOCOL_MECHANISMS = (
+    "aggregate_gaussian",
+    "aggregate_laplace",
+    "irwin_hall",
+    "individual_direct",
+    "individual_shifted",
+)
+
+# repro.dist.compress spells the layered mechanisms differently; accept
+# both so launch flags work for the mesh path and the runtime alike.
+_ALIASES = {
+    "layered_shifted": "individual_shifted",
+    "layered_direct": "individual_direct",
+    "none_": "none",
+}
+
+_MSG_DTYPES = {"int32": jnp.int32, "int16": jnp.int16, "int8": jnp.int8}
+
+
+def canonical_mechanism(name: str) -> str:
+    return _ALIASES.get(name, name)
+
+
+def round_key(seed: int, rnd: int):
+    """The shared per-round key every party derives locally."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rnd)
+
+
+def client_dither_key(key, n: int, pos: int):
+    """Client ``pos``'s dither key for a cohort of ``n`` — the seed that
+    travels with the message so the learner can verify provenance."""
+    _, ks = jax.random.split(key)
+    return jax.random.split(ks, n)[pos]
+
+
+def expected_dither_keys(key, n: int) -> np.ndarray:
+    """(n, 2) uint32 key data of every announced cohort position."""
+    _, ks = jax.random.split(key)
+    return np.asarray(jax.random.split(ks, n))
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundProtocol:
+    """Per-deployment codec parameters (cohort size varies per round and
+    is passed per call, so one protocol object serves the whole run).
+
+    mechanism: one of PROTOCOL_MECHANISMS (aliases accepted).
+    sigma:     std of the *aggregated* error for the full cohort.
+    clip:      per-coordinate clip before encoding (DP sensitivity knob).
+    per_coord: one shared (A, B) per coordinate vs per tensor
+               (aggregate_* only; per-coordinate is the DP-faithful mode).
+    msg_dtype: integer payload dtype on the wire.
+    """
+
+    mechanism: str = "aggregate_gaussian"
+    sigma: float = 1e-3
+    clip: float = 1.0
+    per_coord: bool = True
+    msg_dtype: str = "int32"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "mechanism", canonical_mechanism(self.mechanism)
+        )
+        if self.mechanism not in PROTOCOL_MECHANISMS:
+            raise KeyError(
+                f"mechanism {self.mechanism!r} has no integer wire format; "
+                f"protocol mechanisms: {PROTOCOL_MECHANISMS}"
+            )
+        if not self.sigma > 0.0:
+            raise ValueError(f"sigma must be > 0, got {self.sigma}")
+        if self.msg_dtype not in _MSG_DTYPES:
+            raise KeyError(f"msg_dtype {self.msg_dtype!r} not in {_MSG_DTYPES}")
+
+    # ----------------------------------------------------------- encode
+    def client_message(self, key, n: int, pos: int, x) -> np.ndarray:
+        """Encode client ``pos``'s (unclipped) flat update for a cohort
+        of ``n``.  Returns the integer wire payload."""
+        x = np.asarray(x, np.float32)
+        m = _encode_jit(self, n, x.size)(key, jnp.int32(pos), x)
+        return np.asarray(m)
+
+    # ----------------------------------------------------------- decode
+    def decode(self, key, n: int, msgs: np.ndarray, mask: np.ndarray):
+        """Decode a round from the realized subset of the cohort.
+
+        msgs: (n, d) integer payloads, zero-padded where mask is False.
+        mask: (n,) bool — which announced positions actually reported.
+        Returns ``(y, bits_per_coord)``: the straggler-renormalized mean
+        update and the measured Elias-gamma bits per coordinate.
+        """
+        d = msgs.shape[-1]
+        y, bits = _decode_jit(self, n, d)(
+            key, jnp.asarray(msgs), jnp.asarray(mask, bool)
+        )
+        return y, float(bits)
+
+
+def _agg_mech(proto: RoundProtocol, n: int) -> AggregateGaussianMechanism:
+    family = "laplace" if proto.mechanism == "aggregate_laplace" else "gaussian"
+    return AggregateGaussianMechanism(n, proto.sigma, proto.per_coord,
+                                      family=family)
+
+
+def _layered_q(proto: RoundProtocol, n: int) -> LayeredQuantizer:
+    # per-client noise N(0, n sigma^2) averages to N(0, sigma^2)
+    return LayeredQuantizer(
+        Gaussian(proto.sigma * math.sqrt(n)),
+        shifted=proto.mechanism == "individual_shifted",
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _encode_jit(proto: RoundProtocol, n: int, d: int):
+    def encode(key, pos, x):
+        x = jnp.clip(x.astype(jnp.float32), -proto.clip, proto.clip)
+        kt, ks = jax.random.split(key)
+        ck = jax.random.split(ks, n)[pos]
+        if proto.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
+            mech = _agg_mech(proto, n)
+            t = mech.global_randomness(
+                kt, (d,), a_min=mech.a_min_for_range(2.0 * proto.clip)
+            )
+            m = mech.encode(x, mech.client_randomness(ck, (d,)), t)
+        elif proto.mechanism == "irwin_hall":
+            mech = IrwinHallMechanism(n, proto.sigma)
+            m = mech.encode(x, mech.client_randomness(ck, (d,)))
+        else:  # individual_direct / individual_shifted
+            q = _layered_q(proto, n)
+            m = q.encode(x, q.randomness(ck, (d,)))
+        return m.astype(_MSG_DTYPES[proto.msg_dtype])
+
+    return jax.jit(encode)
+
+
+@functools.lru_cache(maxsize=512)
+def _decode_jit(proto: RoundProtocol, n: int, d: int):
+    def decode(key, msgs, mask):
+        kt, ks = jax.random.split(key)
+        cks = jax.random.split(ks, n)
+        maskf = mask.astype(jnp.float32)
+        r = jnp.maximum(maskf.sum(), 1.0)
+        msgs = jnp.where(mask[:, None], msgs.astype(jnp.int32), 0)
+        bits = coding.elias_gamma_bits(msgs).astype(jnp.float32)
+        bits_pc = (bits * maskf[:, None]).sum() / (r * d)
+
+        if proto.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
+            mech = _agg_mech(proto, n)
+            t = mech.global_randomness(
+                kt, (d,), a_min=mech.a_min_for_range(2.0 * proto.clip)
+            )
+            ss = jax.vmap(lambda k: mech.client_randomness(k, (d,)))(cks)
+            s_sum = (ss * maskf[:, None]).sum(0)
+            m_sum = msgs.sum(0).astype(jnp.float32)
+            # decode_sum with the ANNOUNCED-n step but the REALIZED-r
+            # divisor: renormalizes the mean when stragglers drop out
+            # (r == n recovers the exact-error decode verbatim).
+            y = (m_sum - s_sum) * (t.A * mech.w / r) + t.B * proto.sigma
+        elif proto.mechanism == "irwin_hall":
+            mech = IrwinHallMechanism(n, proto.sigma)
+            ss = jax.vmap(lambda k: mech.client_randomness(k, (d,)))(cks)
+            s_sum = (ss * maskf[:, None]).sum(0)
+            y = (msgs.sum(0).astype(jnp.float32) - s_sum) * (mech.w / r)
+        else:  # non-homomorphic: decode each client, renormalized mean
+            q = _layered_q(proto, n)
+            rands = jax.vmap(lambda k: q.randomness(k, (d,)))(cks)
+            ys = jax.vmap(q.decode)(msgs, rands)
+            y = (ys * maskf[:, None]).sum(0) / r
+        return y, bits_pc
+
+    return jax.jit(decode)

@@ -1,0 +1,133 @@
+"""Top-level async runtime: wire transport + actors + monitor together.
+
+    cfg = RuntimeConfig(fl=FLConfig(n_clients=8, mechanism="aggregate_gaussian",
+                                    sigma=1e-3, clip=2.0))
+    rt = AsyncFederatedRuntime(cfg, QuadraticWorkload(8, 512))
+    params, summary, records = rt.run(workload.init_params(), n_rounds=20)
+
+The uplink carries integers only (packed quantized updates + dither
+seeds); params go downlink in round announces.  At staleness bound 0
+with full participation the result is bitwise identical to
+`fl.federated.FederatedAveraging` — both sides run the exact same
+jitted codec from `runtime.protocol`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+# Module-style import (cycle with repro.fl.federated, see actors.py)
+import repro.fl.federated as federated
+from repro.runtime import protocol
+from repro.runtime.actors import ClientSpec, Learner, run_client
+from repro.runtime.messages import SHUTDOWN
+from repro.runtime.monitor import Monitor, RoundRecord
+from repro.runtime.transport import make_transport
+
+__all__ = ["RuntimeConfig", "AsyncFederatedRuntime", "analytic_bits_per_coord"]
+
+# FL-loop mechanism names -> dist.compress naming for analytic bit rates
+_COMPRESS_NAMES = {
+    "aggregate_gaussian": "aggregate_gaussian",
+    "aggregate_laplace": "aggregate_laplace",
+    "irwin_hall": "irwin_hall",
+    "individual_shifted": "layered_shifted",
+    "individual_direct": "layered_direct",
+}
+
+
+def analytic_bits_per_coord(mechanism: str, n: int, sigma: float,
+                            clip: float) -> Optional[float]:
+    """Expected bits/coordinate from the compression layer's accounting
+    (None if the mechanism has no analytic/MC rate there)."""
+    from repro.dist.compress import CompressionConfig, message_bits
+
+    name = _COMPRESS_NAMES.get(protocol.canonical_mechanism(mechanism))
+    if name is None:
+        return None
+    try:
+        comp = CompressionConfig(mechanism=name, sigma=sigma, clip=clip)
+        return float(message_bits(comp, n))
+    except (KeyError, NotImplementedError):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    fl: federated.FLConfig
+    # staleness / aggregation policy
+    staleness_bound: int = 0
+    staleness_weighting: str = "uniform"  # uniform | inverse
+    quorum: float = 1.0  # fraction of the announced cohort to wait for
+    round_timeout_s: float = 30.0
+    poll_interval_s: float = 0.002
+    buffer_capacity: int = 4096
+    # client behaviour
+    max_retries: int = 3
+    retry_backoff_s: float = 0.01
+    straggler_fraction: float = 0.0  # wall-clock stragglers (sleep past
+    straggler_delay_s: float = 0.5   # the deadline -> arrive stale)
+    # transport
+    transport: str = "thread"  # thread | process
+    drop_prob: float = 0.0
+
+
+class AsyncFederatedRuntime:
+    """Owns transport + client actors for a run; single-use."""
+
+    def __init__(self, cfg: RuntimeConfig, workload):
+        fl = cfg.fl
+        mech = protocol.canonical_mechanism(fl.mechanism)
+        if mech not in protocol.PROTOCOL_MECHANISMS:
+            raise ValueError(
+                f"mechanism {fl.mechanism!r} has no integer wire format; "
+                f"async runtime supports {protocol.PROTOCOL_MECHANISMS}"
+            )
+        kw = dict(fl.mech_kwargs)
+        self.cfg = cfg
+        self.workload = workload
+        self.proto = protocol.RoundProtocol(
+            mechanism=mech, sigma=fl.sigma, clip=fl.clip,
+            per_coord=bool(kw.get("per_coord", True)),
+        )
+
+    def run(self, params0: np.ndarray, n_rounds: int
+            ) -> Tuple[np.ndarray, dict, List[RoundRecord]]:
+        cfg = self.cfg
+        fl = cfg.fl
+        transport = make_transport(cfg.transport, fl.n_clients,
+                                   cfg.drop_prob, drop_seed=fl.seed)
+        monitor = Monitor(
+            bits_per_coord_analytic=analytic_bits_per_coord(
+                fl.mechanism, fl.n_clients, fl.sigma, fl.clip)
+        )
+        specs = [
+            ClientSpec(
+                client_id=i, seed=fl.seed, proto=self.proto,
+                workload=self.workload, max_retries=cfg.max_retries,
+                retry_backoff_s=cfg.retry_backoff_s,
+                straggler_fraction=cfg.straggler_fraction,
+                straggler_delay_s=cfg.straggler_delay_s,
+            )
+            for i in range(fl.n_clients)
+        ]
+        transport.start_clients(run_client, specs)
+        learner = Learner(
+            fl, self.proto, transport.learner_endpoint(),
+            np.asarray(params0, np.float32), monitor,
+            staleness_bound=cfg.staleness_bound,
+            staleness_weighting=cfg.staleness_weighting,
+            quorum=cfg.quorum, round_timeout_s=cfg.round_timeout_s,
+            poll_interval_s=cfg.poll_interval_s,
+            buffer_capacity=cfg.buffer_capacity,
+        )
+        try:
+            params = learner.run(n_rounds)
+        finally:
+            learner.endpoint.broadcast(SHUTDOWN)
+            transport.shutdown()
+        summary = monitor.summary()
+        monitor.close()
+        return params, summary, list(monitor.records)

@@ -1,0 +1,182 @@
+"""Pluggable learner<->client transports.
+
+Two implementations behind one endpoint API:
+
+  * ThreadTransport  — `queue.Queue` pairs, clients as daemon threads in
+    this process.  Zero-copy, deterministic, the default for tests and
+    the runtime benchmark.
+  * ProcessTransport — `multiprocessing` (spawn) queues, clients as real
+    OS processes each with their own jax runtime.  The CI smoke path
+    (`launch/train.py --runtime async --transport process`).
+
+Both preserve integer payloads exactly (numpy arrays cross either
+boundary bit-for-bit; the runtime tests pin this).  Loss injection
+(`drop_prob`) makes `send` raise TransportError with a deterministic
+per-client rng so the client actor's bounded retry/backoff path is
+exercised without a flaky network.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import queue
+import threading
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.runtime.messages import ClientUpdate, RoundAnnounce
+
+__all__ = [
+    "TransportError",
+    "LearnerEndpoint",
+    "ClientEndpoint",
+    "ThreadTransport",
+    "ProcessTransport",
+    "make_transport",
+]
+
+
+class TransportError(RuntimeError):
+    """A send was lost (injected loss or closed peer); caller may retry."""
+
+
+class ClientEndpoint:
+    """One client's view: receive announces, send updates.
+
+    Picklable when built over multiprocessing queues (the queues travel
+    to the child through Process args — queue inheritance)."""
+
+    def __init__(self, client_id: int, down, up, drop_prob: float = 0.0,
+                 drop_seed: int = 0):
+        self.client_id = client_id
+        self._down = down
+        self._up = up
+        self._drop_prob = float(drop_prob)
+        self._drop_seed = int(drop_seed)
+        self._drop_rng = None  # built lazily so the endpoint pickles
+
+    def recv_latest(self, timeout: float) -> Optional[RoundAnnounce]:
+        """Newest pending announce (drains the queue — a slow client
+        skips rounds it missed instead of working through a backlog)."""
+        try:
+            msg = self._down.get(timeout=timeout)
+        except queue.Empty:
+            return None
+        while True:
+            try:
+                msg = self._down.get_nowait()
+            except queue.Empty:
+                return msg
+
+    def send(self, update: ClientUpdate) -> None:
+        if self._drop_prob > 0.0:
+            if self._drop_rng is None:
+                self._drop_rng = np.random.default_rng(
+                    (self._drop_seed, self.client_id)
+                )
+            if self._drop_rng.random() < self._drop_prob:
+                raise TransportError(
+                    f"injected loss (client {self.client_id}, "
+                    f"attempt {update.attempt})"
+                )
+        self._up.put(update)
+
+
+class LearnerEndpoint:
+    """The learner's view: broadcast announces, poll the shared uplink."""
+
+    def __init__(self, downs: Sequence[Any], up):
+        self._downs = list(downs)
+        self._up = up
+
+    @property
+    def n_clients(self) -> int:
+        return len(self._downs)
+
+    def broadcast(self, announce: RoundAnnounce) -> None:
+        for q in self._downs:
+            q.put(announce)
+
+    def poll(self, timeout: float) -> Optional[ClientUpdate]:
+        try:
+            return self._up.get(timeout=max(timeout, 1e-4))
+        except queue.Empty:
+            return None
+
+
+class _BaseTransport:
+    def learner_endpoint(self) -> LearnerEndpoint:
+        return LearnerEndpoint(self._downs, self._up)
+
+    def client_endpoint(self, i: int) -> ClientEndpoint:
+        return ClientEndpoint(i, self._downs[i], self._up,
+                              self.drop_prob, self.drop_seed)
+
+
+class ThreadTransport(_BaseTransport):
+    kind = "thread"
+
+    def __init__(self, n_clients: int, drop_prob: float = 0.0,
+                 drop_seed: int = 0):
+        self.n_clients = n_clients
+        self.drop_prob = drop_prob
+        self.drop_seed = drop_seed
+        self._downs = [queue.Queue() for _ in range(n_clients)]
+        self._up: "queue.Queue" = queue.Queue()
+        self._threads: List[threading.Thread] = []
+
+    def start_clients(self, target: Callable, specs: Sequence[Any]) -> None:
+        for i, spec in enumerate(specs):
+            t = threading.Thread(
+                target=target, args=(self.client_endpoint(i), spec),
+                name=f"fl-client-{i}", daemon=True,
+            )
+            t.start()
+            self._threads.append(t)
+
+    def shutdown(self, timeout: float = 10.0) -> None:
+        for t in self._threads:
+            t.join(timeout=timeout)
+        self._threads = []
+
+
+class ProcessTransport(_BaseTransport):
+    kind = "process"
+
+    def __init__(self, n_clients: int, drop_prob: float = 0.0,
+                 drop_seed: int = 0):
+        self.n_clients = n_clients
+        self.drop_prob = drop_prob
+        self.drop_seed = drop_seed
+        # spawn (not fork): children must not inherit an initialized jax
+        self._ctx = multiprocessing.get_context("spawn")
+        self._downs = [self._ctx.Queue() for _ in range(n_clients)]
+        self._up = self._ctx.Queue()
+        self._procs: List[Any] = []
+
+    def start_clients(self, target: Callable, specs: Sequence[Any]) -> None:
+        for i, spec in enumerate(specs):
+            p = self._ctx.Process(
+                target=target, args=(self.client_endpoint(i), spec),
+                name=f"fl-client-{i}", daemon=True,
+            )
+            p.start()
+            self._procs.append(p)
+
+    def shutdown(self, timeout: float = 30.0) -> None:
+        for p in self._procs:
+            p.join(timeout=timeout)
+        for p in self._procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5.0)
+        self._procs = []
+
+
+def make_transport(kind: str, n_clients: int, drop_prob: float = 0.0,
+                   drop_seed: int = 0):
+    if kind == "thread":
+        return ThreadTransport(n_clients, drop_prob, drop_seed)
+    if kind == "process":
+        return ProcessTransport(n_clients, drop_prob, drop_seed)
+    raise KeyError(f"unknown transport {kind!r}; have thread|process")

@@ -1,0 +1,137 @@
+"""Picklable client workloads for the async runtime.
+
+A workload is a frozen config dataclass that crosses the transport
+boundary (thread arg or spawned-process pickle) and builds its actual
+compute — jax functions, model params, data streams — *inside* the
+actor via ``build()``.  ``build()`` returns
+
+    grad(flat_params: np.ndarray, client_id: int, rnd: int) -> np.ndarray
+
+over flat float32 vectors: the runtime's wire format is flat (the
+protocol encodes one vector per client), so flatten/unflatten of model
+pytrees lives here, not in the actors.
+
+* ``QuadraticWorkload`` — d-dim least squares with per-client targets;
+  closed-form gradient, no jit.  Used by the bitwise sync-vs-async
+  tests and the runtime benchmark (fast, deterministic).
+* ``ModelGradWorkload`` — real model NLL gradients from the arch
+  registry over the deterministic synthetic non-IID client streams.
+  Used by ``launch/train.py --runtime async`` (the CI smoke path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["QuadraticWorkload", "ModelGradWorkload"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticWorkload:
+    """f_c(x) = ||x - t_c||^2 / 2 with t_c ~ scale * N(0, I) per client."""
+
+    n_clients: int
+    d: int
+    seed: int = 0
+    scale: float = 1.0
+
+    def _targets(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + 7919)
+        return (self.scale
+                * rng.standard_normal((self.n_clients, self.d))
+                ).astype(np.float32)
+
+    def init_params(self) -> np.ndarray:
+        return np.zeros(self.d, np.float32)
+
+    def build(self) -> Callable:
+        targets = self._targets()
+
+        def grad(flat: np.ndarray, client_id: int, rnd: int) -> np.ndarray:
+            del rnd
+            return np.asarray(flat, np.float32) - targets[client_id]
+
+        return grad
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelGradWorkload:
+    """NLL gradient of a registry architecture on client-partitioned
+    synthetic data.  Round number doubles as the data step, so every
+    round sees a fresh deterministic batch."""
+
+    arch: str
+    smoke: bool = True
+    seq: int = 32
+    batch: int = 2
+    data: str = "lm"
+    seed: int = 0
+
+    def _model_cfg(self):
+        from repro import configs
+
+        cfg = (configs.get_smoke_config(self.arch) if self.smoke
+               else configs.get_config(self.arch))
+        if self.smoke:
+            cfg = cfg.scaled(compute_dtype="float32")
+        return cfg
+
+    def _data_cfg(self, cfg):
+        from repro.data import synthetic
+
+        return synthetic.DataConfig(vocab=cfg.vocab, seq_len=self.seq,
+                                    global_batch=self.batch, seed=self.seed,
+                                    kind=self.data)
+
+    def init_params(self) -> np.ndarray:
+        import jax
+
+        from repro.models import nn, registry
+
+        cfg = self._model_cfg()
+        params = nn.init_params(registry.param_specs(cfg),
+                                jax.random.PRNGKey(self.seed))
+        return np.concatenate([
+            np.asarray(p, np.float32).reshape(-1)
+            for p in jax.tree.leaves(params)
+        ])
+
+    def build(self) -> Callable:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.data import synthetic
+        from repro.models import nn, registry
+
+        cfg = self._model_cfg()
+        dc = self._data_cfg(cfg)
+        specs = registry.param_specs(cfg)
+        template = nn.init_params(specs, jax.random.PRNGKey(self.seed))
+        leaves = jax.tree.leaves(template)
+        treedef = jax.tree.structure(template)
+        shapes = [p.shape for p in leaves]
+        sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+        loss = registry.loss_fn(cfg)
+        batch_fn = synthetic.batch_fn(dc)
+
+        def unflatten(flat):
+            out, off = [], 0
+            for shape, size in zip(shapes, sizes):
+                out.append(flat[off : off + size].reshape(shape))
+                off += size
+            return jax.tree.unflatten(treedef, out)
+
+        @jax.jit
+        def flat_grad(flat, batch):
+            g = jax.grad(lambda f: loss(unflatten(f), batch))(flat)
+            return g.astype(jnp.float32)
+
+        def grad(flat: np.ndarray, client_id: int, rnd: int) -> np.ndarray:
+            data = synthetic.with_frontend_stubs(
+                batch_fn(dc, rnd, client=client_id), cfg)
+            return np.asarray(
+                flat_grad(jnp.asarray(flat, jnp.float32), data))
+
+        return grad

@@ -166,12 +166,12 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh):
         inv = 1.0 / tc.grad_accum
         return l * inv, jax.tree.map(lambda x: x * inv, g)
 
-    def apply_update(state, grads, loss):
+    def apply_update(state, grads, loss, cohort):
         updates, opt_state = opt.update(grads, state["opt_state"], state["params"])
         params = jax.tree.map(jnp.add, state["params"], updates)
         return (
             {"params": params, "opt_state": opt_state, "step": state["step"] + 1},
-            {"loss": loss},
+            {"loss": loss, "cohort": cohort},
         )
 
     if comp is not None and has_pod:
@@ -200,18 +200,22 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh):
 
             def aggregate(g, k):
                 local = jax.tree.map(lambda t: t[0], g)  # this pod's client
-                return compress_mod.compress_tree(
+                agg = compress_mod.compress_tree(
                     local, comp, k, axis="pod", n_clients=n_clients
                 )
+                # realized cohort: pods actually contributing to the psum
+                # (drives the DP accounting in examples/dp_federated_training)
+                realized = jax.lax.psum(jnp.ones((), jnp.int32), "pod")
+                return agg, realized
 
-            grads = jax.shard_map(
+            grads, realized = jax.shard_map(
                 aggregate,
                 mesh=mesh,
                 in_specs=(jax.tree.map(lambda _: P("pod"), grads), P()),
-                out_specs=jax.tree.map(lambda _: P(), grads),
+                out_specs=(jax.tree.map(lambda _: P(), grads), P()),
                 check_vma=False,
             )(grads, key)
-            return apply_update(state, grads, jnp.mean(losses))
+            return apply_update(state, grads, jnp.mean(losses), realized)
 
         return step
 
@@ -222,7 +226,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh: Mesh):
             grads = compress_mod.compress_tree(
                 grads, comp, key, axis=None, n_clients=1
             )
-        return apply_update(state, grads, loss)
+        return apply_update(state, grads, loss, jnp.int32(n_clients))
 
     return step
 

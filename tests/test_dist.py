@@ -17,7 +17,8 @@ from repro.models import registry
 # ------------------------------------------------------------- compress
 @pytest.mark.parametrize(
     "mechanism",
-    ["aggregate_gaussian", "irwin_hall", "layered_shifted", "layered_direct"],
+    ["aggregate_gaussian", "aggregate_laplace", "irwin_hall",
+     "layered_shifted", "layered_direct"],
 )
 def test_compress_tree_roundtrip_unbiased_exact_std(mechanism):
     """Point-to-point (n=1): the decompressed tree is the input plus
@@ -60,7 +61,8 @@ def test_compress_tree_homomorphic_psum_matches_mean():
     n, d, sigma = 8, 4096, 1e-3
     mesh = jax.make_mesh((8, 1, 1), ("pod", "data", "model"))
     xs = jax.random.uniform(jax.random.PRNGKey(0), (n, d), minval=-0.5, maxval=0.5)
-    for mechanism in ["aggregate_gaussian", "irwin_hall", "layered_shifted"]:
+    for mechanism in ["aggregate_gaussian", "aggregate_laplace",
+                      "irwin_hall", "layered_shifted"]:
         comp = CompressionConfig(mechanism=mechanism, sigma=sigma, clip=1.0)
 
         def agg(g):

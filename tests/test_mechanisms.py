@@ -124,6 +124,23 @@ def test_aggregate_gaussian_exact_and_homomorphic():
     assert mech.homomorphic and bits < 32
 
 
+def test_aggregate_laplace_exact_and_homomorphic():
+    """End-to-end aggregate mechanism with the Laplace target: the
+    aggregated error is exactly Laplace with std sigma (scale
+    sigma/sqrt(2)), via the same homomorphic sum-decode."""
+    n, sigma, d = 6, 0.8, 50_000
+    mech = get_mechanism("aggregate_laplace", n, sigma, per_coord=True)
+    assert mech.homomorphic and not mech.exact_gaussian
+    assert mech.name == "aggregate_laplace"
+    xs = jax.random.uniform(jax.random.PRNGKey(28), (n, d), minval=-5, maxval=5)
+    y, bits = mech.run(jax.random.PRNGKey(29), xs)
+    err = np.asarray(y - xs.mean(0))
+    b = sigma / math.sqrt(2.0)
+    assert ks_statistic(err, lambda z: laplace_cdf(z, b)) < ks_threshold(d)
+    assert abs(err.std() - sigma) < 0.03 * sigma
+    assert bits < 32
+
+
 def test_sigm_exact_gaussian_wrt_subsampled_mean():
     n, sigma, gamma, d = 10, 0.5, 0.6, 40_000
     mech = SIGM(n, sigma, gamma)
