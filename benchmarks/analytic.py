@@ -115,7 +115,11 @@ def _zamba_attn_layers(cfg: ModelConfig) -> int:
     return cfg.n_layers // cfg.shared_attn_every
 
 
-def train_cell(arch: str, multi_pod: bool = False) -> CellModel:
+def train_cell(arch: str, multi_pod: bool = False,
+               compress_bits: float | None = None) -> CellModel:
+    """``compress_bits``: wire width per gradient coordinate of the
+    cross-pod collective (e.g. ``dist.compress.wire_bits_per_coord`` for
+    a packed fused config); None = uncompressed f32 gradients."""
     cfg = configs.get_config(arch)
     pods, data, model = _mesh_dims(multi_pod)
     chips = pods * data * model
@@ -167,7 +171,10 @@ def train_cell(arch: str, multi_pod: bool = False) -> CellModel:
         / model,
     }
     if pods > 1:
-        coll["cross_pod_grads"] = 4.0 * N_total / model * (pods - 1) / pods
+        wire_bytes = 4.0 if compress_bits is None else compress_bits / 8.0
+        coll["cross_pod_grads"] = (
+            wire_bytes * N_total / model * (pods - 1) / pods
+        )
     return CellModel(exec_flops / chips, model_flops / chips, hbm, coll)
 
 

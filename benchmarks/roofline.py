@@ -16,6 +16,7 @@ import json
 import os
 
 from repro import configs
+from repro.dist import compress as dcompress
 
 from benchmarks import analytic
 
@@ -37,20 +38,28 @@ def run(csv):
         rec = _dryrun_record(arch, shape) or {}
         parsed = rec.get("collective_counts", {})
         n_coll = sum(parsed.values()) if parsed else -1
-        bottleneck = m.bottleneck
-        total = max(m.compute_s, m.memory_s, m.collective_s)
-        frac = {
-            "compute": m.compute_s,
-            "memory": m.memory_s,
-            "collective": m.collective_s,
-        }[bottleneck] / max(sum([m.compute_s, m.memory_s, m.collective_s]), 1e-30)
         csv(
             f"roofline/{arch}_{shape}_compute_s", m.compute_s,
-            f"bottleneck={bottleneck}",
+            f"bottleneck={m.bottleneck}",
         )
         csv(f"roofline/{arch}_{shape}_memory_s", m.memory_s,
             f"hlo_collective_ops={n_coll}")
         csv(
             f"roofline/{arch}_{shape}_collective_s", m.collective_s,
             f"useful_frac={m.useful_fraction:.3f}",
+        )
+        if configs.SHAPES[shape]["step"] != "train":
+            continue
+        # cross-pod gradient collective under the fused packed wire
+        # format (16-bit fields, two per int32 word) vs f32
+        bits = dcompress.wire_bits_per_coord(
+            dcompress.CompressionConfig(fused=True, msg_bits=16), n_clients=2
+        )
+        mp = analytic.train_cell(arch, multi_pod=True, compress_bits=bits)
+        mp_f32 = analytic.train_cell(arch, multi_pod=True)
+        csv(
+            f"roofline/{arch}_{shape}_mp_packed_coll_bytes",
+            mp.coll_bytes["cross_pod_grads"],
+            f"f32_bytes={mp_f32.coll_bytes['cross_pod_grads']:.3e}"
+            f"|wire_bits={bits:g}",
         )

@@ -29,6 +29,7 @@ MODULES = [
     "fig10_langevin",
     "table1_properties",
     "bench_runtime",
+    "bench_compress",
     "roofline",
 ]
 

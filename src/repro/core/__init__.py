@@ -7,9 +7,11 @@ from repro.core.distributions import Gaussian, Laplace
 from repro.core.irwin_hall import IrwinHallMechanism, NormalizedIrwinHall
 from repro.core.layered import LayeredQuantizer
 from repro.core.mechanisms import MECHANISMS, get_mechanism
+from repro.core.packing import PackGeometry
 from repro.core.sigm import SIGM
 
 __all__ = [
+    "PackGeometry",
     "AggregateGaussianMechanism",
     "Gaussian",
     "Laplace",

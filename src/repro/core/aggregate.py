@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dither
+from repro.core.packing import PackGeometry, geometry_for_bits
 from repro.core.decompose import (
     DecomposeTables,
     decompose_gaussian,
@@ -113,6 +114,19 @@ class AggregateGaussianMechanism:
         """Smallest safe A for inputs |x_i| <= t_range / 2: keeps the
         *summed* message within a 2^msg_bits+ budget (int32 psum)."""
         return t_range * self.n / (self.w * float(2**msg_bits))
+
+    # --- packed-collective geometry ---------------------------------------
+    def pack_geometry(self, bits: int) -> PackGeometry:
+        """Geometry of the true-bit-width packed collective: ``bits``-wide
+        unsigned fields whose n-fold sum cannot carry (see core.packing).
+        The step scale A must be clamped at ``a_min_for_geometry`` so the
+        natural message range fits the field clamp."""
+        return geometry_for_bits(bits, self.n)
+
+    def a_min_for_geometry(self, clip: float, geom: PackGeometry):
+        """Smallest A whose messages floor(x/(A w) + s + 1/2) stay within
+        [-m_max, m_max] for |x| <= clip: |m| <= clip/(A w) + 1 <= m_max."""
+        return clip / ((geom.m_max - 1) * self.w)
 
     def client_randomness(self, key, shape=(), dtype=jnp.float32):
         """S_i ~ U(-1/2,1/2) per coordinate; key = fold_in(round_key, i)."""

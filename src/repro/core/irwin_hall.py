@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dither
+from repro.core.packing import PackGeometry, geometry_for_range
 
 __all__ = ["NormalizedIrwinHall", "ih_support_halfwidth", "IrwinHallMechanism"]
 
@@ -162,3 +163,11 @@ class IrwinHallMechanism:
         """Fixed-length bits per coordinate for |x_i| <= t/2."""
         supp = 2.0 + t / self.w
         return max(1, math.ceil(math.log2(supp + 1)))
+
+    def pack_geometry(self, clip: float) -> PackGeometry:
+        """Packed-collective geometry at the mechanism's natural message
+        range: |m| = |floor(x/w + s + 1/2)| <= ceil(clip/w) + 1 for
+        |x| <= clip, so the field width is the true code width of the
+        *sum*, b = ceil(log2(n * range))."""
+        m_max = math.ceil(clip / self.w) + 1
+        return geometry_for_range(m_max, self.n)

@@ -22,12 +22,25 @@ global (A, B) draw uses it directly, client i's dither uses
 ``fold_in(key, i)`` with i = the pod's ``axis_index``, and the decode
 recomputes every client's dither from the same seed — only integers
 ever cross pods for the homomorphic mechanisms.
+
+Two wire formats for the homomorphic mechanisms:
+
+  * unfused (default): one signed ``msg_dtype`` word per coordinate,
+    clip / dither / quantize as separate XLA ops — the always-available
+    reference path.
+  * fused (``CompressionConfig(fused=True)``): clip + dither-add +
+    quantize + bias + bit-pack run in ONE kernel pass per direction
+    (``repro.kernels.fused_agg``; the XLA-fused oracle on CPU), and the
+    psum carries b-bit fields packed into int32 words — collective
+    bytes shrink by ~b/32 (see ``repro.core.packing``).  Both paths
+    clamp messages to the same ``PackGeometry``, so they produce
+    bit-identical messages and the same exact error law.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +50,8 @@ from repro.core.aggregate import AggregateGaussianMechanism
 from repro.core.distributions import Gaussian
 from repro.core.irwin_hall import IrwinHallMechanism
 from repro.core.layered import LayeredQuantizer
+from repro.core.packing import PackGeometry, geometry_for_range
+from repro.kernels import ops
 
 PyTree = Any
 
@@ -49,7 +64,14 @@ MECHANISMS = (
     "layered_direct",
 )
 
+HOMOMORPHIC = ("aggregate_gaussian", "aggregate_laplace", "irwin_hall")
+
 _MSG_DTYPES = {"int32": jnp.int32, "int16": jnp.int16, "int8": jnp.int8}
+
+# default packed field width per psum payload dtype: the widest field
+# whose biased sums (a) fit the dtype's signed range in the unfused
+# reference and (b) stay f32-exact (<= 2^24) in the fused decode
+_DEFAULT_PACK_BITS = {"int32": 24, "int16": 15, "int8": 7}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,11 +83,21 @@ class CompressionConfig:
     clip:      per-coordinate clip applied to each client's gradient
                before encoding (also the DP sensitivity knob).
     msg_dtype: integer payload of the cross-pod psum ("int32"/"int16"/
-               "int8"); narrower payloads shrink the collective but can
-               wrap for tiny shared steps — a dry-run/roofline knob.
+               "int8") on the unfused path; narrower payloads shrink
+               the collective but can wrap for tiny shared steps unless
+               ``msg_bits`` pins the geometry.
     per_coord: one (A, B) shared draw per coordinate (paper-faithful,
                i.i.d. noise, required for DP and the KS tests) vs one
                per tensor (cheaper RNG, coordinates dependent).
+    fused:     run the homomorphic mechanisms through the fused
+               encode/decode kernels with true-bit-width packed psum
+               payloads (homomorphic mechanisms only).
+    msg_bits:  packed field width b for the aggregate mechanisms (their
+               step scale A is clamped so messages fit); for irwin_hall
+               an upper bound on the derived natural width.  None picks
+               the ``msg_dtype`` default.  Setting it also clamps the
+               unfused reference to the same geometry, keeping the two
+               paths bit-identical.
     """
 
     mechanism: str = "aggregate_gaussian"
@@ -73,6 +105,8 @@ class CompressionConfig:
     clip: float = 1.0
     msg_dtype: str = "int32"
     per_coord: bool = True
+    fused: bool = False
+    msg_bits: Optional[int] = None
 
     def __post_init__(self):
         if self.mechanism not in MECHANISMS:
@@ -83,6 +117,15 @@ class CompressionConfig:
             raise ValueError(f"sigma must be > 0, got {self.sigma}")
         if self.msg_dtype not in _MSG_DTYPES:
             raise KeyError(f"msg_dtype {self.msg_dtype!r} not in {_MSG_DTYPES}")
+        if self.fused and self.mechanism not in HOMOMORPHIC:
+            raise ValueError(
+                f"fused packing needs an integer-homomorphic mechanism "
+                f"({HOMOMORPHIC}), got {self.mechanism!r}"
+            )
+        if self.msg_bits is not None and not 2 <= self.msg_bits <= 24:
+            raise ValueError(
+                f"msg_bits must be in [2, 24], got {self.msg_bits}"
+            )
 
 
 def _client_index(axis: Optional[str]):
@@ -91,18 +134,100 @@ def _client_index(axis: Optional[str]):
 
 def _dither_sum(ks, n: int, shape) -> jnp.ndarray:
     """sum_j S_j recomputed from the shared seed (every pod holds the
-    round key, so no float collective is needed for the dither sum)."""
-    s = jnp.zeros(shape, jnp.float32)
-    for j in range(n):
-        s = s + dither.dither_noise(jax.random.fold_in(ks, j), shape)
-    return s
+    round key, so no float collective is needed for the dither sum).
+    One batched key derivation + one vmapped draw — the traced graph no
+    longer grows with the cohort size."""
+    keys = jax.vmap(lambda j: jax.random.fold_in(ks, j))(jnp.arange(n))
+    return jax.vmap(lambda k: dither.dither_noise(k, shape))(keys).sum(0)
 
 
 def _psum_msg(m, comp: CompressionConfig, axis: Optional[str]):
+    if comp.fused:
+        # packed words are already the narrow payload; sum as int32
+        return jax.lax.psum(m, axis) if axis is not None else m
     m = m.astype(_MSG_DTYPES[comp.msg_dtype])
     if axis is not None:
         m = jax.lax.psum(m, axis)
     return m.astype(jnp.int32)
+
+
+# --------------------------------------------------- homomorphic leaf codec
+def _make_mech(comp: CompressionConfig, n: int):
+    if comp.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
+        return AggregateGaussianMechanism(
+            n, comp.sigma, comp.per_coord,
+            family=comp.mechanism.removeprefix("aggregate_"),
+        )
+    return IrwinHallMechanism(n, comp.sigma)
+
+
+def leaf_geometry(comp: CompressionConfig, n: int) -> Optional[PackGeometry]:
+    """Packed-field geometry of one homomorphic leaf, or None when the
+    config runs the legacy unclamped int32 path (not fused, no msg_bits).
+    """
+    if comp.mechanism not in HOMOMORPHIC:
+        return None
+    if not comp.fused and comp.msg_bits is None:
+        return None
+    n = max(int(n), 1)
+    bits = (comp.msg_bits if comp.msg_bits is not None
+            else _DEFAULT_PACK_BITS[comp.msg_dtype])
+    mech = _make_mech(comp, n)
+    if isinstance(mech, IrwinHallMechanism):
+        # natural range, capped at the configured width (the cap clamps
+        # rarely-hit extreme messages; the unfused reference clamps too)
+        m_nat = math.ceil(comp.clip / mech.w) + 1
+        m_cap = ((1 << bits) - 1) // (2 * n)
+        return geometry_for_range(min(m_nat, max(m_cap, 2)), n)
+    return mech.pack_geometry(bits)
+
+
+def _leaf_params(comp: CompressionConfig, n: int, kt, shape) -> Tuple[
+        Any, Optional[jnp.ndarray], Optional[PackGeometry]]:
+    """(step, offset, geometry) of a homomorphic leaf: step is the
+    dither step (scalar w, or the shared per-coordinate A*w array),
+    offset the shared additive term (B*sigma, or None)."""
+    mech = _make_mech(comp, n)
+    geom = leaf_geometry(comp, n)
+    if isinstance(mech, AggregateGaussianMechanism):
+        a_min = (mech.a_min_for_geometry(comp.clip, geom)
+                 if geom is not None
+                 else mech.a_min_for_range(2.0 * comp.clip))
+        t = mech.global_randomness(kt, shape, a_min=a_min)
+        return t.A * mech.w, t.B * comp.sigma, geom
+    return mech.w, None, geom
+
+
+def encode_leaf(x32, comp: CompressionConfig, step, s_i,
+                geom: Optional[PackGeometry]):
+    """One client's integer message for a clipped f32 leaf: biased
+    packed int32 words when fused, else the signed per-coordinate
+    message (clamped to the shared geometry when one is active)."""
+    if comp.fused:
+        return ops.fused_pack_encode(x32, s_i, step, geom.bits, geom.m_max)
+    m = dither.dither_encode(x32, step, s_i)
+    if geom is not None:
+        m = jnp.clip(m, -geom.m_max, geom.m_max)
+    return m
+
+
+def decode_leaf_sum(m_sum, comp: CompressionConfig, n, r_msgs,
+                    step, offset, s_sum, geom: Optional[PackGeometry],
+                    shape):
+    """Decode the SUM of ``r_msgs`` messages (psum output, or the
+    server's masked sum) into the across-clients mean + exact noise.
+    ``n`` is the decode divisor (the cohort size, or the runtime's
+    traced realized count for straggler renormalization); ``r_msgs``
+    the number of messages actually summed (their packing biases must
+    be removed)."""
+    step_dec = step / n  # python float stays scalar; arrays stay arrays
+    if comp.fused:
+        s_eff = s_sum + jnp.float32(r_msgs) * geom.bias
+        return ops.fused_unpack_decode(
+            m_sum, s_eff, step_dec, offset, geom.bits, shape
+        )
+    y = (m_sum.astype(jnp.float32) - s_sum) * step_dec
+    return y if offset is None else y + offset
 
 
 def _compress_leaf(x, comp: CompressionConfig, key, axis: Optional[str],
@@ -118,27 +243,17 @@ def _compress_leaf(x, comp: CompressionConfig, key, axis: Optional[str],
     kt, ks = jax.random.split(key)
     idx = _client_index(axis)
 
-    if comp.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
-        mech = AggregateGaussianMechanism(
-            n, comp.sigma, comp.per_coord,
-            family=comp.mechanism.removeprefix("aggregate_"),
-        )
-        # replicated computation (shared key); A clamped so the summed
-        # int32 messages cannot overflow for inputs in [-clip, clip]
-        t = mech.global_randomness(
-            kt, shape, a_min=mech.a_min_for_range(2.0 * comp.clip)
-        )
-        s_i = mech.client_randomness(jax.random.fold_in(ks, idx), shape)
-        m_sum = _psum_msg(mech.encode(x32, s_i, t), comp, axis)
-        s_sum = _dither_sum(ks, n, shape) if axis is not None else s_i
-        return mech.decode_sum(m_sum, s_sum, t).astype(dtype)
-
-    if comp.mechanism == "irwin_hall":
-        mech = IrwinHallMechanism(n, comp.sigma)
-        s_i = mech.client_randomness(jax.random.fold_in(ks, idx), shape)
-        m_sum = _psum_msg(mech.encode(x32, s_i), comp, axis)
-        s_sum = _dither_sum(ks, n, shape) if axis is not None else s_i
-        return mech.decode_sum(m_sum, s_sum).astype(dtype)
+    if comp.mechanism in HOMOMORPHIC:
+        step, offset, geom = _leaf_params(comp, n, kt, shape)
+        s_i = dither.dither_noise(jax.random.fold_in(ks, idx), shape)
+        m_sum = _psum_msg(encode_leaf(x32, comp, step, s_i, geom), comp, axis)
+        if axis is not None:
+            s_sum, r_msgs = _dither_sum(ks, n, shape), n
+        else:
+            s_sum, r_msgs = s_i, 1
+        y = decode_leaf_sum(m_sum, comp, n, r_msgs, step, offset, s_sum,
+                            geom, shape)
+        return y.astype(dtype)
 
     if comp.mechanism in ("layered_shifted", "layered_direct"):
         # point-to-point AINQ per client (per-client noise N(0, n s^2)
@@ -216,3 +331,17 @@ def message_bits(comp: CompressionConfig, n_clients: int, *,
     else:
         raise KeyError(comp.mechanism)
     return float(jnp.mean(coding.elias_gamma_bits(m)))
+
+
+def wire_bits_per_coord(comp: CompressionConfig, n_clients: int,
+                        size: Optional[int] = None) -> float:
+    """Bits per coordinate a client's payload actually occupies on the
+    collective: ``32 / group`` for the fused packed format (exact,
+    including word padding, when ``size`` is given), else the unfused
+    ``msg_dtype`` word width."""
+    geom = leaf_geometry(comp, max(int(n_clients), 1))
+    if comp.fused and geom is not None:
+        if size:
+            return 32.0 * geom.n_words(size) / size
+        return 32.0 / geom.group
+    return float(jnp.dtype(_MSG_DTYPES[comp.msg_dtype]).itemsize * 8)

@@ -79,6 +79,8 @@ class FederatedAveraging:
             self.proto = protocol.RoundProtocol(
                 mechanism=mech, sigma=cfg.sigma, clip=cfg.clip,
                 per_coord=bool(kw.get("per_coord", True)),
+                packed=bool(kw.get("packed", False)),
+                msg_bits=kw.get("msg_bits"),
             )
 
     def _cohort(self, rnd: int) -> np.ndarray:
@@ -95,7 +97,8 @@ class FederatedAveraging:
                 self.proto.client_message(key, n, pos, x)
                 for pos, x in enumerate(flat)
             ])
-            return self.proto.decode(key, n, msgs, np.ones(n, bool))
+            return self.proto.decode(key, n, msgs, np.ones(n, bool),
+                                     d=int(flat[0].size))
         xs = jnp.clip(jnp.stack(flat), -cfg.clip, cfg.clip)
         mech = get_mechanism(cfg.mechanism, n, cfg.sigma,
                              **dict(cfg.mech_kwargs))

@@ -1,0 +1,145 @@
+"""Pallas TPU kernels: fused homomorphic encode / decode for the
+aggregate AINQ mechanisms (aggregate_gaussian, aggregate_laplace,
+irwin_hall).
+
+These generalize ``dither_pack.py`` from its fixed scalar-step signed
+form to the mechanisms' geometry:
+
+  * the quantization step may be PER-COORDINATE (the aggregate
+    mechanisms' shared DECOMPOSE draw gives step = A * w with A an
+    array in per_coord mode) or a compile-time scalar (Irwin-Hall);
+  * fields are packed UNSIGNED with bias m_max so that int32 words sum
+    homomorphically across clients (see ``repro.core.packing``): the
+    cross-pod psum carries b-bit payloads, b = ceil(log2(range));
+  * decode fuses unpack + bias/dither subtraction + rescale + the
+    mechanism's additive offset (B * sigma) in the same VMEM pass.
+
+Encode, one pass per (rows x 128) tile:
+
+    m      = clamp(floor(x / step + s + 1/2), -m_max, m_max)
+    word_c = sum_j (m[j, c] + m_max) << (bits * j)     G = 32//bits
+
+Decode (word_sum = psum of packed words, s_eff = dither_sum + r*m_max):
+
+    u_j = (word_sum >> (bits * j)) & mask              (unsigned)
+    y   = (u - s_eff) * step_dec [+ offset]
+
+Layout matches dither_pack.py: (R, G, 128) tiles in VMEM, packing
+reduces over the G axis; shapes padded to row multiples by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 256  # rows (of 128-lane vectors) per tile
+LANES = 128
+
+
+def _quantize_pack(x, s, step, bits: int, m_max: int):
+    g = max(32 // bits, 1)
+    m = jnp.clip(jnp.floor(x / step + s + 0.5), float(-m_max), float(m_max))
+    u = m.astype(jnp.int32) + m_max
+    word = jnp.zeros((x.shape[0], LANES), jnp.int32)
+    for j in range(g):  # static unroll over the pack group
+        word = word | (u[:, j, :] << (bits * j))
+    return word
+
+
+def _unpack_affine(word, s_eff, step, offset, bits: int):
+    g = max(32 // bits, 1)
+    mask = (1 << bits) - 1
+    outs = []
+    for j in range(g):
+        # arithmetic shift + mask extracts exact bits [b*j, b*(j+1)) even
+        # when the top field occupies bit 31 of the summed word
+        outs.append(((word >> (bits * j)) & mask).astype(jnp.float32))
+    u = jnp.stack(outs, axis=1)  # (R, G, 128)
+    y = (u - s_eff) * step
+    return y if offset is None else y + offset
+
+
+def _encode_kernel(*refs, step: float | None, bits: int, m_max: int):
+    if step is None:
+        x_ref, s_ref, t_ref, o_ref = refs
+        st = t_ref[...]
+    else:
+        x_ref, s_ref, o_ref = refs
+        st = step
+    o_ref[...] = _quantize_pack(x_ref[...], s_ref[...], st, bits, m_max)
+
+
+def _decode_kernel(*refs, step: float | None, has_offset: bool, bits: int):
+    refs = list(refs)
+    w_ref, se_ref = refs[0], refs[1]
+    pos = 2
+    if step is None:
+        st = refs[pos][...]
+        pos += 1
+    else:
+        st = step
+    off = refs[pos][...] if has_offset else None
+    o_ref = refs[-1]
+    o_ref[...] = _unpack_affine(w_ref[...], se_ref[...], st, off, bits)
+
+
+def fused_encode(x, s, step, bits: int, m_max: int, *,
+                 interpret: bool = False):
+    """x, s: (R, G, 128) f32 with G = 32 // bits; ``step`` a python
+    scalar or an (R, G, 128) array -> packed biased int32 words (R, 128).
+    """
+    R, G, L = x.shape
+    assert G == max(32 // bits, 1) and L == LANES, (x.shape, bits)
+    bm = min(BLOCK_R, R)
+    grid = (pl.cdiv(R, bm),)
+    spec3 = pl.BlockSpec((bm, G, LANES), lambda i: (i, 0, 0))
+    scalar = isinstance(step, (int, float))
+    in_specs = [spec3, spec3] + ([] if scalar else [spec3])
+    args = (x, s) if scalar else (x, s, step)
+    return pl.pallas_call(
+        functools.partial(
+            _encode_kernel, step=float(step) if scalar else None,
+            bits=bits, m_max=m_max,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANES), jnp.int32),
+        interpret=interpret,
+    )(*args)
+
+
+def fused_decode(word, s_eff, step, offset, bits: int, *,
+                 interpret: bool = False):
+    """Summed packed words (R, 128) + effective dither s_eff = dither_sum
+    + r * m_max (R, G, 128) -> f32 (R, G, 128).  ``step`` is the DECODE
+    step (mechanism step / n); ``offset`` is the additive shared offset
+    (B * sigma) or None."""
+    R, L = word.shape
+    G = max(32 // bits, 1)
+    bm = min(BLOCK_R, R)
+    grid = (pl.cdiv(R, bm),)
+    spec3 = pl.BlockSpec((bm, G, LANES), lambda i: (i, 0, 0))
+    scalar = isinstance(step, (int, float))
+    in_specs = [pl.BlockSpec((bm, LANES), lambda i: (i, 0)), spec3]
+    args = [word, s_eff]
+    if not scalar:
+        in_specs.append(spec3)
+        args.append(step)
+    if offset is not None:
+        in_specs.append(spec3)
+        args.append(offset)
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, step=float(step) if scalar else None,
+            has_offset=offset is not None, bits=bits,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=spec3,
+        out_shape=jax.ShapeDtypeStruct((R, G, LANES), jnp.float32),
+        interpret=interpret,
+    )(*args)

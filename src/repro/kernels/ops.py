@@ -15,7 +15,9 @@ import jax.numpy as jnp
 
 from repro.kernels import dither_pack as dp
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused_agg as fg
 from repro.kernels import layered_encode as le
+from repro.kernels import ref
 
 LANES = 128
 
@@ -24,14 +26,14 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _pad_rows(x, g):
-    """Flatten to (R, g, 128), padding with zeros; returns (arr, n)."""
-    n = x.size
+def _pad_rows(x, g, value: float = 0.0):
+    """Flatten to (R, g, 128) rows, padding with ``value`` (steps pad
+    with 1.0 so padded lanes never divide by zero)."""
     row = g * LANES
-    R = -(-n // row)
-    pad = R * row - n
-    flat = jnp.pad(x.reshape(-1), (0, pad))
-    return flat.reshape(R, g, LANES), n
+    R = -(-x.size // row)
+    pad = R * row - x.size
+    flat = jnp.pad(x.reshape(-1), (0, pad), constant_values=value)
+    return flat.reshape(R, g, LANES)
 
 
 @functools.partial(jax.jit, static_argnames=("w", "bits", "interpret"))
@@ -42,9 +44,9 @@ def dither_pack_encode(x, s, w, bits: int = 8, interpret: bool | None = None):
     (U(-1/2,1/2) shared randomness)."""
     interpret = _on_cpu() if interpret is None else interpret
     g = 32 // bits
-    xr, n = _pad_rows(x, g)
-    sr, _ = _pad_rows(s, g)
-    return dp.dither_pack(xr, sr, float(w), bits, interpret=interpret), n
+    xr = _pad_rows(x, g)
+    sr = _pad_rows(s, g)
+    return dp.dither_pack(xr, sr, float(w), bits, interpret=interpret), x.size
 
 
 @functools.partial(jax.jit, static_argnames=("w", "bits", "shape", "interpret"))
@@ -52,17 +54,123 @@ def dither_unpack_decode(word, s, w, bits: int, shape, interpret: bool | None = 
     """Unpack+decode back to ``shape``."""
     interpret = _on_cpu() if interpret is None else interpret
     g = 32 // bits
-    sr, n = _pad_rows(s, g)
+    sr = _pad_rows(s, g)
     y = dp.unpack_decode(word, sr, float(w), bits, interpret=interpret)
     return y.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
+# ------------------------------------------- fused homomorphic agg codec
+def _impl_default(impl: str | None) -> str:
+    """'pallas' on accelerators; the XLA-fused oracle on CPU, where the
+    Pallas interpreter would run the kernel body tile-by-tile in Python.
+    Pass impl='pallas' (+ interpret) explicitly to exercise the kernel."""
+    if impl is None:
+        return "xla" if _on_cpu() else "pallas"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"impl must be 'pallas' or 'xla', got {impl!r}")
+    return impl
+
+
+@functools.partial(
+    jax.jit, static_argnames=("step", "bits", "m_max", "impl", "interpret")
+)
+def _fused_encode_scalar(x, s, step, bits, m_max, impl, interpret):
+    g = max(32 // bits, 1)
+    xr, sr = _pad_rows(x, g), _pad_rows(s, g)
+    if impl == "xla":
+        return ref.fused_encode_ref(xr, sr, step, bits, m_max)
+    return fg.fused_encode(xr, sr, step, bits, m_max, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "m_max", "impl", "interpret")
+)
+def _fused_encode_percoord(x, s, step, bits, m_max, impl, interpret):
+    g = max(32 // bits, 1)
+    xr, sr = _pad_rows(x, g), _pad_rows(s, g)
+    tr = _pad_rows(jnp.broadcast_to(step, x.shape), g, value=1.0)
+    if impl == "xla":
+        return ref.fused_encode_ref(xr, sr, tr, bits, m_max)
+    return fg.fused_encode(xr, sr, tr, bits, m_max, interpret=interpret)
+
+
+def fused_pack_encode(x, s, step, bits: int, m_max: int,
+                      impl: str | None = None,
+                      interpret: bool | None = None):
+    """Fused clip-free homomorphic encode: dither-quantize ``x`` at
+    ``step`` (python scalar, or array broadcastable to x.shape for the
+    per-coordinate aggregate mechanisms), clamp to [-m_max, m_max],
+    bias, and pack to ``bits``-wide unsigned fields -> int32 words
+    (R, 128).  Packed words of different clients ADD homomorphically
+    (core.packing); the caller clips x beforehand."""
+    interpret = _on_cpu() if interpret is None else interpret
+    impl = _impl_default(impl)
+    # 24-bit cap: biased field sums stay <= 2^24, exactly representable
+    # in the f32 decode (wider fields would silently lose low bits)
+    if not 2 <= bits <= 24:
+        raise ValueError(f"packed field width must be in [2, 24], got {bits}")
+    if isinstance(step, (int, float)):
+        return _fused_encode_scalar(x, s, float(step), bits, m_max, impl,
+                                    interpret)
+    return _fused_encode_percoord(x, s, step, bits, m_max, impl, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("step", "bits", "shape", "impl", "interpret")
+)
+def _fused_decode_scalar(word, s_eff, step, offset, bits, shape, impl,
+                         interpret):
+    g = max(32 // bits, 1)
+    se = _pad_rows(s_eff, g)
+    off = None if offset is None else _pad_rows(
+        jnp.broadcast_to(offset, s_eff.shape), g)
+    if impl == "xla":
+        y = ref.fused_decode_ref(word, se, step, off, bits)
+    else:
+        y = fg.fused_decode(word, se, step, off, bits, interpret=interpret)
+    return y.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "shape", "impl", "interpret")
+)
+def _fused_decode_percoord(word, s_eff, step, offset, bits, shape, impl,
+                           interpret):
+    g = max(32 // bits, 1)
+    se = _pad_rows(s_eff, g)
+    tr = _pad_rows(jnp.broadcast_to(step, s_eff.shape), g, value=1.0)
+    off = None if offset is None else _pad_rows(
+        jnp.broadcast_to(offset, s_eff.shape), g)
+    if impl == "xla":
+        y = ref.fused_decode_ref(word, se, tr, off, bits)
+    else:
+        y = fg.fused_decode(word, se, tr, off, bits, interpret=interpret)
+    return y.reshape(-1)[: math.prod(shape)].reshape(shape)
+
+
+def fused_unpack_decode(word, s_eff, step_dec, offset, bits: int, shape,
+                        impl: str | None = None,
+                        interpret: bool | None = None):
+    """Fused homomorphic decode of SUMMED packed words back to ``shape``:
+    unpack unsigned fields, subtract ``s_eff`` (= dither_sum + r * m_max
+    for r summed messages), rescale by ``step_dec`` (mechanism step / n;
+    scalar or array) and add ``offset`` (B * sigma, or None)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    impl = _impl_default(impl)
+    shape = tuple(shape)
+    if isinstance(step_dec, (int, float)):
+        return _fused_decode_scalar(word, s_eff, float(step_dec), offset,
+                                    bits, shape, impl, interpret)
+    return _fused_decode_percoord(word, s_eff, step_dec, offset, bits,
+                                  shape, impl, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
 def layered_encode(x, u, layer, sigma: float, interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
-    xr, n = _pad_rows(x, 1)
-    ur, _ = _pad_rows(u, 1)
-    lr, _ = _pad_rows(jnp.maximum(layer, 1e-30), 1)
+    xr = _pad_rows(x, 1)
+    ur = _pad_rows(u, 1)
+    lr = _pad_rows(jnp.maximum(layer, 1e-30), 1)
     m = le.layered_encode(
         xr.reshape(-1, LANES), ur.reshape(-1, LANES), lr.reshape(-1, LANES),
         sigma, interpret=interpret,
@@ -73,9 +181,9 @@ def layered_encode(x, u, layer, sigma: float, interpret: bool | None = None):
 @functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
 def layered_decode(m, u, layer, sigma: float, interpret: bool | None = None):
     interpret = _on_cpu() if interpret is None else interpret
-    mr, _ = _pad_rows(m, 1)
-    ur, _ = _pad_rows(u, 1)
-    lr, _ = _pad_rows(jnp.maximum(layer, 1e-30), 1)
+    mr = _pad_rows(m, 1)
+    ur = _pad_rows(u, 1)
+    lr = _pad_rows(jnp.maximum(layer, 1e-30), 1)
     y = le.layered_decode(
         mr.reshape(-1, LANES).astype(jnp.int32), ur.reshape(-1, LANES),
         lr.reshape(-1, LANES), sigma, interpret=interpret,

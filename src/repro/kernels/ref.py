@@ -47,6 +47,38 @@ def unpack_decode_ref(word, s, w, bits: int):
     return (m.astype(jnp.float32) - s) * w
 
 
+# --------------------------------------- fused homomorphic encode/decode
+def fused_encode_ref(x, s, step, bits: int, m_max: int):
+    """Oracle for fused_agg._encode_kernel: clip -> dither-quantize ->
+    bias -> unsigned-pack.  x, s (and array ``step``) are (..., G, C)
+    with G = 32 // bits; returns packed int32 words (..., C)."""
+    g = max(32 // bits, 1)
+    m = jnp.clip(jnp.floor(x / step + s + 0.5), float(-m_max), float(m_max))
+    u = m.astype(jnp.int32) + m_max
+    word = jnp.zeros(u.shape[:-2] + u.shape[-1:], jnp.int32)
+    for j in range(g):
+        word = word | (u[..., j, :] << (bits * j))
+    return word
+
+
+def unpack_biased_ref(word, bits: int):
+    """Unsigned-field unpack of (summed) biased words: (..., C) ->
+    (..., G, C) int32 field sums."""
+    g = max(32 // bits, 1)
+    mask = (1 << bits) - 1
+    return jnp.stack(
+        [(word >> (bits * j)) & mask for j in range(g)], axis=-2
+    )
+
+
+def fused_decode_ref(word, s_eff, step, offset, bits: int):
+    """Oracle for fused_agg._decode_kernel: unpack + subtract the
+    effective dither (dither_sum + r * m_max) + rescale [+ offset]."""
+    u = unpack_biased_ref(word, bits).astype(jnp.float32)
+    y = (u - s_eff) * step
+    return y if offset is None else y + offset
+
+
 # ------------------------------------------------- shifted layered encode
 def layered_encode_ref(x, u, layer, sigma: float):
     """Fused shifted-layered-quantizer encode for a Gaussian target:

@@ -58,7 +58,9 @@ def run_async(args) -> None:
     fl = FLConfig(
         n_clients=args.clients, mechanism=args.mechanism, sigma=args.sigma,
         clip=args.clip, cohort_fraction=args.cohort_fraction, lr=args.lr,
-        mech_kwargs=(("per_coord", args.per_coord),),
+        mech_kwargs=(("per_coord", args.per_coord),
+                     ("packed", args.fused),
+                     ("msg_bits", args.msg_bits)),
     )
     rc = RuntimeConfig(
         fl=fl, staleness_bound=args.staleness_bound,
@@ -108,6 +110,13 @@ def main():
                     default=True,
                     help="per-coordinate shared randomness (paper-faithful "
                          "i.i.d. noise); --no-per-coord draws per tensor")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused encode/decode kernels with true-bit-width "
+                         "packed collectives (homomorphic mechanisms only); "
+                         "async runtime: packed client uplink")
+    ap.add_argument("--msg-bits", type=int, default=None,
+                    help="packed field width (2..24); default: widest for "
+                         "the msg dtype")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--data", default="lm", choices=["lm", "uniform"])
@@ -148,7 +157,8 @@ def main():
     comp = None
     if args.mechanism != "none":
         comp = CompressionConfig(mechanism=args.mechanism, sigma=args.sigma,
-                                 clip=args.clip, per_coord=args.per_coord)
+                                 clip=args.clip, per_coord=args.per_coord,
+                                 fused=args.fused, msg_bits=args.msg_bits)
     tc = steps.TrainConfig(optimizer="adamw", lr=args.lr,
                            grad_accum=args.grad_accum, compression=comp)
     state = steps.init_train_state(cfg, tc, jax.random.PRNGKey(0))

@@ -146,14 +146,16 @@ class Learner:
             cohort = self.buffer.cohort_of(g)
             n = len(cohort)
             d = self.params.size
-            msgs = np.zeros((n, d), np.asarray(
-                next(iter(received.values())).payload).dtype)
+            # buffer rows match the wire payload (packed protocols carry
+            # fewer int32 words than coordinates), not the update dim
+            first = np.asarray(next(iter(received.values())).payload)
+            msgs = np.zeros((n, first.size), first.dtype)
             mask = np.zeros(n, bool)
             for pos, upd in received.items():
                 msgs[pos] = upd.payload
                 mask[pos] = True
             y, bits = self.proto.decode(
-                protocol.round_key(self.fl.seed, g), n, msgs, mask)
+                protocol.round_key(self.fl.seed, g), n, msgs, mask, d=d)
             s = rnd - g
             ys.append(y)
             ws.append(staleness_weight(s, self.staleness_weighting))

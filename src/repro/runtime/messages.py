@@ -41,7 +41,10 @@ SHUTDOWN = RoundAnnounce(rnd=-1, cohort=(), params=None, shutdown=True)
 class ClientUpdate:
     """Client -> learner: one encoded update.
 
-    payload:     integer message (int32/int16/int8), shape (d,).
+    payload:     integer message: one signed word per coordinate
+                 (int32/int16/int8, shape (d,)), or — packed protocols —
+                 biased b-bit fields in int32 words (shorter than d;
+                 payloads of different clients add homomorphically).
     dither_seed: (2,) uint32 key data of the client's dither key —
                  checked against `protocol.expected_dither_keys`.
     origin_round / cohort_pos: the round (and the client's slot in its

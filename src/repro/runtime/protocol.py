@@ -34,11 +34,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import coding
+from repro.core import coding, dither
 from repro.core.aggregate import AggregateGaussianMechanism
 from repro.core.distributions import Gaussian
 from repro.core.irwin_hall import IrwinHallMechanism
 from repro.core.layered import LayeredQuantizer
+from repro.dist import compress as dcompress
 
 __all__ = [
     "PROTOCOL_MECHANISMS",
@@ -108,6 +109,8 @@ class RoundProtocol:
     clip: float = 1.0
     per_coord: bool = True
     msg_dtype: str = "int32"
+    packed: bool = False
+    msg_bits: Optional[int] = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -122,26 +125,60 @@ class RoundProtocol:
             raise ValueError(f"sigma must be > 0, got {self.sigma}")
         if self.msg_dtype not in _MSG_DTYPES:
             raise KeyError(f"msg_dtype {self.msg_dtype!r} not in {_MSG_DTYPES}")
+        if self.packed and self.mechanism not in dcompress.HOMOMORPHIC:
+            raise ValueError(
+                f"packed uplink needs an integer-homomorphic mechanism "
+                f"({dcompress.HOMOMORPHIC}), got {self.mechanism!r}"
+            )
+
+    def _comp(self) -> dcompress.CompressionConfig:
+        """The equivalent mesh-path config: the packed wire format is
+        the same fused codec, crossing a transport instead of a psum."""
+        return dcompress.CompressionConfig(
+            mechanism=self.mechanism, sigma=self.sigma, clip=self.clip,
+            msg_dtype=self.msg_dtype, per_coord=self.per_coord,
+            fused=True, msg_bits=self.msg_bits,
+        )
+
+    def payload_size(self, n: int, d: int) -> int:
+        """Elements of one client's wire payload for a ``d``-dim update
+        (packed: int32 words incl. row padding; else one word/coord)."""
+        if not self.packed:
+            return d
+        geom = dcompress.leaf_geometry(self._comp(), n)
+        lanes = 128 * max(32 // geom.bits, 1)
+        return -(-d // lanes) * 128  # padded rows of 128 words
 
     # ----------------------------------------------------------- encode
     def client_message(self, key, n: int, pos: int, x) -> np.ndarray:
         """Encode client ``pos``'s (unclipped) flat update for a cohort
-        of ``n``.  Returns the integer wire payload."""
+        of ``n``.  Returns the integer wire payload: one ``msg_dtype``
+        word per coordinate, or (packed) biased b-bit fields in int32
+        words — the payloads of different clients then ADD
+        homomorphically, so a secure-agg server never unpacks them."""
         x = np.asarray(x, np.float32)
         m = _encode_jit(self, n, x.size)(key, jnp.int32(pos), x)
         return np.asarray(m)
 
     # ----------------------------------------------------------- decode
-    def decode(self, key, n: int, msgs: np.ndarray, mask: np.ndarray):
+    def decode(self, key, n: int, msgs: np.ndarray, mask: np.ndarray,
+               d: Optional[int] = None):
         """Decode a round from the realized subset of the cohort.
 
-        msgs: (n, d) integer payloads, zero-padded where mask is False.
+        msgs: (n, p) integer payloads, zero-padded where mask is False
+              (p = d unpacked, or the packed word count).
         mask: (n,) bool — which announced positions actually reported.
+        d:    update dimension; required when packed (the payload length
+              alone can't recover it), defaults to ``msgs.shape[-1]``.
         Returns ``(y, bits_per_coord)``: the straggler-renormalized mean
-        update and the measured Elias-gamma bits per coordinate.
+        update and the wire bits per coordinate (measured Elias-gamma
+        for unpacked payloads; the exact packed width otherwise).
         """
-        d = msgs.shape[-1]
-        y, bits = _decode_jit(self, n, d)(
+        if d is None:
+            if self.packed:
+                raise ValueError("packed decode needs the update dim d")
+            d = msgs.shape[-1]
+        y, bits = _decode_jit(self, n, int(d))(
             key, jnp.asarray(msgs), jnp.asarray(mask, bool)
         )
         return y, float(bits)
@@ -163,10 +200,20 @@ def _layered_q(proto: RoundProtocol, n: int) -> LayeredQuantizer:
 
 @functools.lru_cache(maxsize=512)
 def _encode_jit(proto: RoundProtocol, n: int, d: int):
+    comp = proto._comp() if proto.packed else None
+
     def encode(key, pos, x):
         x = jnp.clip(x.astype(jnp.float32), -proto.clip, proto.clip)
         kt, ks = jax.random.split(key)
         ck = jax.random.split(ks, n)[pos]
+        if proto.packed:
+            # same fused codec as the mesh path, but with the protocol's
+            # split-based dither keys (kept so provenance checks and the
+            # unpacked wire stay key-compatible)
+            step, _, geom = dcompress._leaf_params(comp, n, kt, (d,))
+            s_i = dither.dither_noise(ck, (d,))
+            words = dcompress.encode_leaf(x, comp, step, s_i, geom)
+            return words.reshape(-1)
         if proto.mechanism in ("aggregate_gaussian", "aggregate_laplace"):
             mech = _agg_mech(proto, n)
             t = mech.global_randomness(
@@ -186,12 +233,29 @@ def _encode_jit(proto: RoundProtocol, n: int, d: int):
 
 @functools.lru_cache(maxsize=512)
 def _decode_jit(proto: RoundProtocol, n: int, d: int):
+    comp = proto._comp() if proto.packed else None
+
     def decode(key, msgs, mask):
         kt, ks = jax.random.split(key)
         cks = jax.random.split(ks, n)
         maskf = mask.astype(jnp.float32)
         r = jnp.maximum(maskf.sum(), 1.0)
         msgs = jnp.where(mask[:, None], msgs.astype(jnp.int32), 0)
+
+        if proto.packed:
+            # Masked word sum IS the homomorphic aggregate a secure-agg
+            # server would hand back; decode it with the ANNOUNCED-n
+            # step/geometry but the REALIZED-r divisor and bias count.
+            step, offset, geom = dcompress._leaf_params(comp, n, kt, (d,))
+            ss = jax.vmap(lambda k: dither.dither_noise(k, (d,)))(cks)
+            s_sum = (ss * maskf[:, None]).sum(0)
+            word_sum = msgs.sum(0).reshape(-1, 128)
+            y = dcompress.decode_leaf_sum(
+                word_sum, comp, r, r, step, offset, s_sum, geom, (d,)
+            )
+            bits_pc = jnp.float32(32.0 * msgs.shape[-1] / d)
+            return y, bits_pc
+
         bits = coding.elias_gamma_bits(msgs).astype(jnp.float32)
         bits_pc = (bits * maskf[:, None]).sum() / (r * d)
 

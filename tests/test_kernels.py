@@ -38,6 +38,45 @@ def test_dither_pack_error_is_uniform(bits):
     assert np.abs(err).max() <= w / 2 + 1e-6
 
 
+@pytest.mark.parametrize("bits,m_max", [(4, 3), (8, 25), (16, 4000), (24, 80000)])
+@pytest.mark.parametrize("percoord", [False, True])
+def test_fused_agg_kernel_vs_oracle(bits, m_max, percoord):
+    """fused_agg encode/decode (interpret) against the jnp oracles:
+    identical packed words, matching affine decode, scalar and
+    per-coordinate step."""
+    from repro.kernels import fused_agg as fg
+
+    shape = (1000, 37)
+    key = jax.random.PRNGKey(bits * 2 + percoord)
+    x = jax.random.uniform(key, shape, minval=-1.0, maxval=1.0)
+    s = jax.random.uniform(jax.random.fold_in(key, 1), shape,
+                           minval=-0.5, maxval=0.5)
+    base = 1.0 / (m_max - 1)
+    if percoord:
+        step = base * jax.random.uniform(
+            jax.random.fold_in(key, 2), shape, minval=0.5, maxval=1.5)
+    else:
+        step = base
+    w_p = ops.fused_pack_encode(x, s, step, bits, m_max, impl="pallas")
+    w_x = ops.fused_pack_encode(x, s, step, bits, m_max, impl="xla")
+    assert w_p.dtype == jnp.int32
+    assert bool(jnp.all(w_p == w_x))
+    offset = None if percoord else 0.125
+    s_eff = s + float(m_max)  # one message summed: r = 1
+    y_p = ops.fused_unpack_decode(w_p, s_eff, step, offset, bits, shape,
+                                  impl="pallas")
+    y_x = ops.fused_unpack_decode(w_x, s_eff, step, offset, bits, shape,
+                                  impl="xla")
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_x), atol=1e-6)
+    m = jnp.clip(jnp.floor(x / step + s + 0.5), -m_max, m_max)
+    y_ref = (m - s) * step + (0.0 if offset is None else offset)
+    # the eager reference can land one step away at exact floor-boundary
+    # ties (fused-multiply contraction); a bias bug would be >= m_max*step
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_ref),
+                               atol=1.05 * base + 1e-5)
+    assert fg.LANES == 128  # layout contract shared with ops._pad_rows
+
+
 @pytest.mark.parametrize("sigma", [0.01, 0.5])
 @pytest.mark.parametrize("shape", [(256,), (130, 77)])
 def test_layered_kernel_matches_core(sigma, shape):
