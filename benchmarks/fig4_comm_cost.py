@@ -7,12 +7,41 @@ x_i ~ U(-t/2, t/2); the paper's qualitative claims to verify:
   * Irwin-Hall cheapest (but noise is IH, not Gaussian);
   * aggregate Gaussian beats individual Gaussian for large n;
   * aggregate Gaussian is homomorphic AND exactly Gaussian.
+
+Next to each entropy figure we emit what the same mechanism actually
+occupies on the training hot path's collective
+(``dist.compress.wire_bits_per_coord``): the fused true-bit-width
+packed format for the homomorphic mechanisms (32/group bits at the
+narrowest field width that holds n summed messages, floored at b8) or
+the unfused ``msg_dtype`` word width (individual/direct layering ships
+one int32 word per coordinate regardless of its entropy).
 """
 from __future__ import annotations
+
+import math
 
 import jax
 
 from repro.core.mechanisms import get_mechanism
+from repro.dist import compress as dc
+
+# paper mechanism -> the hot-path mechanism that carries it
+_WIRE = {
+    "irwin_hall": ("irwin_hall", True),
+    "individual_direct": ("layered_direct", False),
+    "aggregate_gaussian": ("aggregate_gaussian", True),
+}
+
+
+def _wire_comp(name: str, n: int, sigma: float, clip: float):
+    mech, fused = _WIRE[name]
+    if not fused:
+        return dc.CompressionConfig(mechanism=mech, sigma=sigma, clip=clip)
+    # narrowest packed field whose n-fold sum fits with m_max >= 2
+    # (packing.geometry_for_bits), floored at the b8 acceptance width
+    bits = max(8, math.ceil(math.log2(4 * n + 1)))
+    return dc.CompressionConfig(mechanism=mech, sigma=sigma, clip=clip,
+                                fused=True, msg_bits=bits)
 
 
 def run(csv):
@@ -26,8 +55,13 @@ def run(csv):
             for name in ("irwin_hall", "individual_direct", "aggregate_gaussian"):
                 mech = get_mechanism(name, n, sigma)
                 _, bits = mech.run(jax.random.fold_in(key, 1), xs)
+                comp = _wire_comp(name, n, sigma, half_range)
+                wire = dc.wire_bits_per_coord(comp, n, d)
+                fmt = (f"fused_b{comp.msg_bits}" if comp.fused
+                       else comp.msg_dtype)
                 csv(
                     f"fig4/{name}_n{n}_t{int(2 * half_range)}",
                     bits,
-                    f"homomorphic={mech.homomorphic}",
+                    f"homomorphic={mech.homomorphic}"
+                    f"|wire_bits={wire:.3f}|wire={fmt}",
                 )

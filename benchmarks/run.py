@@ -30,6 +30,7 @@ MODULES = [
     "table1_properties",
     "bench_runtime",
     "bench_compress",
+    "bench_serve",
     "roofline",
 ]
 

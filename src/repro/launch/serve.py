@@ -1,8 +1,15 @@
-"""Serving launcher: batched prefill + decode with KV caches.
+"""Serving launcher: thin driver over the continuous-batching engine.
+
+Requests stream through a queue into a fixed pool of KV-cache slots
+(repro.serve.ServeEngine); slots are evicted on EOS / per-request
+max-gen / cache capacity and immediately refilled, so the resident
+decode step stays busy at high occupancy.  ``--naive`` runs the
+pre-engine lockstep loop (repro.serve.oracle) instead — the engine's
+correctness oracle and the tokens/sec baseline.
 
 CPU-container usage (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
-      --batch 2 --prompt-len 16 --gen 8
+      --requests 8 --slots 4 --prompt-len 16 --gen 8
 
 On a TPU mesh the same entry point serves the full config with the
 decode-cell shardings from the dry-run (weights resident bf16 for
@@ -12,24 +19,84 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.data import synthetic
 from repro.dist import meshctx
 from repro.models import nn, registry
 from repro.launch.mesh import make_host_mesh
+from repro.serve import ServeEngine, naive_generate
+
+
+def drive(engine: ServeEngine, params, requests, *, log=lambda *_: None):
+    """Pump ``requests`` (iterable of (rid, tokens, max_gen)) through the
+    slot pool.  Returns (outputs {rid: [token ids]}, stats dict with
+    step/occupancy accounting)."""
+    state = engine.init_state()
+    free = list(range(engine.ecfg.max_slots))
+    pending = deque(requests)
+    outputs: dict = {}
+    slot_rid: dict = {}
+    steps = 0
+    occ_sum = 0.0
+    tokens_out = 0
+    t0 = time.perf_counter()
+    while pending or slot_rid:
+        while free and pending:
+            rid, toks, max_gen = pending.popleft()
+            _, prefix = engine.prefill(params, toks)
+            slot = free.pop()
+            state = engine.insert(state, prefix, slot, max_gen=max_gen)
+            outputs[rid] = [int(prefix.next_token)]
+            tokens_out += 1
+            if max_gen <= 1:  # satisfied by the prefill token alone
+                free.append(slot)
+                log(f"[serve] rid={rid} done at insert (max_gen=1)")
+            else:
+                slot_rid[slot] = rid
+        if not slot_rid:
+            continue
+        occ_sum += len(slot_rid) / engine.ecfg.max_slots
+        state, toks, done = engine.generate_step(params, state)
+        steps += 1
+        toks_h, done_h = np.asarray(toks), np.asarray(done)
+        for slot, rid in list(slot_rid.items()):
+            outputs[rid].append(int(toks_h[slot]))
+            tokens_out += 1
+            if done_h[slot]:
+                del slot_rid[slot]
+                free.append(slot)
+                log(f"[serve] rid={rid} done ({len(outputs[rid])} tokens), "
+                    f"slot {slot} freed")
+    dt = time.perf_counter() - t0
+    return outputs, {
+        "steps": steps,
+        "tokens_out": tokens_out,
+        "wall_s": dt,
+        "mean_occupancy": occ_sum / steps if steps else 0.0,
+        "tokens_per_s": tokens_out / dt if dt > 0 else 0.0,
+    }
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=configs.ARCHS)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=8,
+                    help="tokens per request (prefill token included)")
+    ap.add_argument("--eos", type=int, default=None,
+                    help="token id treated as EOS (frees the slot early)")
+    ap.add_argument("--naive", action="store_true",
+                    help="run the lockstep oracle loop instead")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="(--naive only) lockstep batch size")
     args = ap.parse_args()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -40,47 +107,35 @@ def main():
     meshctx.set_mesh(mesh)
 
     params = nn.init_params(registry.param_specs(cfg), jax.random.PRNGKey(0))
-    serve = jax.jit(registry.serve_fn(cfg))
-    B, P = args.batch, args.prompt_len
-    prompts = synthetic.with_frontend_stubs(
-        {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)},
-        cfg,
-    )
+    P = args.prompt_len
 
-    # prefill: build the cache by stepping the prompt (cache-structured
-    # families) or via the prefill fn (dense, returns stacked KV)
-    t0 = time.time()
-    if cfg.kind in registry.DENSE_KINDS:
-        logits, caches = registry.prefill_fn(cfg)(params, prompts)
-        cache = {"k": caches[0], "v": caches[1]}
-    else:
-        cache = registry.init_decode_state(cfg, B, P)
-        logits = None
-        for t in range(P):
-            logits, cache = serve(params, {"tokens": prompts["tokens"][:, t:t + 1]}, cache)
-    print(f"[serve] prefill {B}x{P} in {time.time() - t0:.2f}s")
+    if args.naive:
+        B = args.batch
+        prompts = synthetic.with_frontend_stubs(
+            {"tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)}, cfg)
+        t0 = time.perf_counter()
+        toks = naive_generate(cfg, params, prompts, args.gen)
+        dt = time.perf_counter() - t0
+        print(f"[serve] naive {B}x{args.gen} tokens in {dt:.2f}s "
+              f"({B * args.gen / dt:.1f} tok/s)")
+        print("[serve] sample token ids:", toks[0].tolist())
+        return
 
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    tok = jnp.clip(tok, 0, cfg.vocab - 1)
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen):
-        logits, new_kv = serve(params, {"tokens": tok}, cache)
-        if cfg.kind in registry.DENSE_KINDS:
-            # ring-buffer append (greedy demo: keep the fixed-size window)
-            cache = {
-                "k": jnp.concatenate([cache["k"][:, :, 1:], new_kv[0]], axis=2),
-                "v": jnp.concatenate([cache["v"][:, :, 1:], new_kv[1]], axis=2),
-            }
-        else:
-            cache = new_kv
-        tok = jnp.clip(jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), 0, cfg.vocab - 1)
-        out.append(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(f"[serve] generated {args.gen} tokens/seq in {dt:.2f}s "
-          f"({B * args.gen / dt:.1f} tok/s)")
-    print("[serve] sample token ids:", gen[0].tolist())
+    engine = ServeEngine(cfg, max_slots=args.slots, max_prefill_len=P,
+                         max_gen_len=args.gen, eos_id=args.eos)
+    rng = np.random.default_rng(1)
+    requests = [
+        (r, rng.integers(0, cfg.vocab, size=(P,), dtype=np.int32), args.gen)
+        for r in range(args.requests)
+    ]
+    outputs, stats = drive(engine, params, requests, log=print)
+    print(f"[serve] {args.requests} requests x {args.gen} tokens on "
+          f"{args.slots} slots: {stats['tokens_out']} tokens, "
+          f"{stats['steps']} steps in {stats['wall_s']:.2f}s "
+          f"({stats['tokens_per_s']:.1f} tok/s, "
+          f"mean occupancy {stats['mean_occupancy']:.0%})")
+    print("[serve] sample token ids:", outputs[0])
 
 
 if __name__ == "__main__":

@@ -68,6 +68,7 @@ def run_async(args) -> None:
         round_timeout_s=args.round_timeout, transport=args.transport,
         straggler_fraction=args.straggler_fraction,
         straggler_delay_s=args.straggler_delay,
+        compilation_cache_dir=args.compilation_cache,
     )
     wl = ModelGradWorkload(arch=args.arch, smoke=args.smoke, seq=seq,
                            batch=batch, data=args.data)
@@ -124,6 +125,10 @@ def main():
     ap.add_argument("--runtime", default="sync", choices=["sync", "async"])
     ap.add_argument("--transport", default="process",
                     choices=["thread", "process"])
+    ap.add_argument("--compilation-cache", default=None,
+                    help="persistent jax compilation cache dir shipped to "
+                         "spawned workers (default: shared tempdir path "
+                         "for --transport process)")
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--staleness-bound", type=int, default=0)

@@ -108,14 +108,42 @@ def flash_attention(
     return out.astype(v.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, new_k, new_v, *, window: Optional[int] = None):
+def decode_attention(
+    q,
+    k_cache,
+    v_cache,
+    new_k,
+    new_v,
+    *,
+    window: Optional[int] = None,
+    valid_len=None,
+    kv_pos=None,
+    q_pos=None,
+):
     """Single-token decode: q (B, 1, HQ, D) attends to the full cache
     (B, S, HK, D) plus its own freshly-appended (new_k, new_v).
 
     With Tq = 1 the score row is only (B, HK, G, S) — safe to
-    materialize even at S = 512k (ring-buffer cache, every slot valid).
-    ``window``: if set, only the most recent ``window`` cache slots
-    (the cache itself is assumed pre-windowed by the caller).
+    materialize even at S = 512k.  Cache validity is expressed one of
+    three ways:
+
+      * neither ``valid_len`` nor ``kv_pos``: every cache row is valid
+        (the naive growing-cache loop);
+      * ``valid_len`` (B,): rows ``[0, valid_len)`` of a linear cache
+        are valid — the slot-pool engine, where cache row i holds
+        absolute position i;
+      * ``kv_pos`` (B, S): per-row absolute positions (-1 = empty) —
+        ring-buffer caches, where row order is not position order.
+
+    ``window``: sliding-window mask — a cache row at absolute position
+    p is attended iff ``p > q_pos - window`` (matching the training-time
+    ``flash_attention`` mask; the new token itself is always attended).
+    ``q_pos`` (B,): absolute position of the new token (required for
+    window masking; defaults to ``valid_len`` when that is given).
+
+    Masked rows contribute exactly 0 to the softmax (their probabilities
+    underflow to 0.0), so a padded cache sums to the same value as a
+    tight one.
     """
     B, _, HQ, D = q.shape
     S, HK = k_cache.shape[1], k_cache.shape[2]
@@ -125,6 +153,23 @@ def decode_attention(q, k_cache, v_cache, new_k, new_v, *, window: Optional[int]
     s_cache = jnp.einsum(
         "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
     )
+    if q_pos is None and valid_len is not None:
+        q_pos = valid_len
+    mask = None  # (B, S) — True where the cache row is attended
+    if kv_pos is not None:
+        mask = kv_pos >= 0
+        if window is not None and q_pos is not None:
+            mask = mask & (kv_pos > q_pos[:, None] - window)
+    elif valid_len is not None:
+        idx = jnp.arange(S)
+        mask = idx[None, :] < valid_len[:, None]
+        if window is not None and q_pos is not None:
+            mask = mask & (idx[None, :] > q_pos[:, None] - window)
+    elif window is not None and q_pos is not None:
+        idx = jnp.arange(S)
+        mask = idx[None, :] > q_pos[:, None] - window
+    if mask is not None:
+        s_cache = jnp.where(mask[:, None, None, :], s_cache, NEG_INF)
     s_self = jnp.einsum(
         "bkgd,bkd->bkg", qg, new_k.reshape(B, HK, D).astype(qg.dtype),
         preferred_element_type=jnp.float32,

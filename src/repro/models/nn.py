@@ -132,6 +132,24 @@ def rope_freqs(head_dim: int, max_t: int, theta: float = 10_000.0, dtype=jnp.flo
     return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
 
 
+def rope_at(head_dim: int, positions, theta: float = 10_000.0, dtype=jnp.float32):
+    """cos/sin evaluated at explicit (possibly traced, per-sequence)
+    integer positions — decode never needs a table sized to the longest
+    context.  positions: (...,) -> cos/sin (..., D/2).  Bitwise equal to
+    indexing a ``rope_freqs`` table at the same positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope_direct(x, cos, sin):
+    """x: (..., T, H, D); cos/sin already gathered per token (..., T, D/2)."""
+    cos = cos[..., :, None, :].astype(x.dtype)
+    sin = sin[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
 def apply_rope(x, cos, sin, positions=None):
     """x: (..., T, H, D). cos/sin: (T_max, D/2). positions: (..., T) or None."""
     if positions is not None:
@@ -140,10 +158,7 @@ def apply_rope(x, cos, sin, positions=None):
     else:
         cos = cos[: x.shape[-3]]
         sin = sin[: x.shape[-3]]
-    cos = cos[..., :, None, :].astype(x.dtype)
-    sin = sin[..., :, None, :].astype(x.dtype)
-    x1, x2 = jnp.split(x, 2, axis=-1)
-    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return apply_rope_direct(x, cos, sin)
 
 
 def cross_entropy_loss(logits, labels, mask=None):

@@ -98,7 +98,15 @@ def decode_state_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, 
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int):
-    """Zero-initialized cache (for smoke tests / real serving)."""
+    """Fresh decode cache (for smoke tests / real serving).  The SSM /
+    hybrid families carry non-zero init (rwkv6 shift tokens, zamba2's
+    kv_pos = -1 empty markers), so dispatch to the family initializers
+    rather than zero-filling the spec tree."""
+    if cfg.kind == "rwkv6":
+        return rwkv6.init_state(cfg, batch)
+    if cfg.kind == "zamba2":
+        win = min(seq_len, cfg.window or seq_len)
+        return zamba2.init_state(cfg, batch, win)
     return jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype), decode_state_specs(cfg, batch, seq_len)
     )
@@ -112,10 +120,8 @@ def serve_fn(cfg: ModelConfig) -> Callable:
         dtype = jnp.dtype(cfg.compute_dtype)
         if cfg.kind in DENSE_KINDS:
             x = transformer.embed_tokens(cfg, params, tokens, dtype)
-            S = cache["k"].shape[2]
-            rope = nn.rope_freqs(cfg.hd, S + 1, cfg.rope_theta, dtype)
             y, new_kv = transformer.decoder_decode(
-                cfg, params, x, rope, (cache["k"], cache["v"])
+                cfg, params, x, (cache["k"], cache["v"])
             )
             y = transformer._norm(cfg, y, params, "final")
             logits = transformer.unembed(cfg, params, y)
@@ -130,7 +136,7 @@ def serve_fn(cfg: ModelConfig) -> Callable:
         if cfg.kind == "rwkv6":
             return rwkv6.decode(cfg, params, tokens, cache)
         if cfg.kind == "zamba2":
-            return zamba2.decode(cfg, params, tokens, cache, pos=None)
+            return zamba2.decode(cfg, params, tokens, cache)
         raise ValueError(cfg.kind)
 
     return serve
@@ -214,9 +220,12 @@ def decode_state_shardings(cfg: ModelConfig, mesh, batch: int, seq_len: int):
             if k == "ssm_tail":  # (T, B, H, P, N)
                 h_ax = "model" if s[2] % mdl == 0 else None
                 return P(None, b_axis(s[1]), h_ax, None, None)
-            # attn_k / attn_v: (B, win, HK, hd)
-            h_ax = "model" if s[2] % mdl == 0 else None
-            return P(b_axis(s[0]), None, h_ax, None)
+            if k in ("attn_k", "attn_v"):  # (G, B, win, HK, hd)
+                h_ax = "model" if s[3] % mdl == 0 else None
+                return P(None, b_axis(s[1]), None, h_ax, None)
+            if k == "kv_pos":  # (B, win)
+                return P(b_axis(s[0]), None)
+            return P(b_axis(s[0]))  # pos: (B,)
 
         return make(spec, specs)
     raise ValueError(cfg.kind)

@@ -205,3 +205,19 @@ def decode(cfg: ModelConfig, params, tokens, state):
     x = nn.rms_norm(x, params["final_w"])
     logits = nn.dense(x, params["lm_head"])
     return logits, {"wkv": wkv, "prev_tm": ptm, "prev_cm": pcm}
+
+
+def prefill(cfg: ModelConfig, params, tokens):
+    """Prompt prefill as a jitted scan of single-token decodes — bitwise
+    identical to stepping ``decode`` token by token (the slot-pool
+    engine's oracle guarantee).  Returns (last-token logits (B, 1, V),
+    decode state after the prompt)."""
+    B, T = tokens.shape
+    state0 = init_state(cfg, B)
+
+    def step(st, tok):
+        logits, st = decode(cfg, params, tok[:, None], st)
+        return st, logits[:, 0]
+
+    state, logits = jax.lax.scan(step, state0, tokens.T)
+    return logits[-1][:, None], state

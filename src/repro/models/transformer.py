@@ -130,18 +130,31 @@ def attn_block(cfg: ModelConfig, p, x, rope, *, window=None):
     return out, (k, v)
 
 
-def attn_block_decode(cfg: ModelConfig, p, x, rope, cache, *, window=None):
+def attn_block_decode(cfg: ModelConfig, p, x, cache, *, pos=None,
+                      valid_len=None, kv_pos=None, window=None):
     """Single-token decode against a cache (B, S, HK, hd). Returns
-    (out, (new_k, new_v))."""
-    cos, sin = rope
+    (out, (new_k, new_v)); the new KV is RoPE-rotated at ``pos`` and
+    ready to be written into the cache.
+
+    ``pos`` (B, 1): absolute position of the incoming token; defaults
+    to the cache length S (the naive loop, whose cache holds exactly
+    the S previous positions).  ``valid_len`` / ``kv_pos`` / ``window``
+    are forwarded to ``attention.decode_attention`` for slot-pool and
+    ring-buffer caches.
+    """
     k_cache, v_cache = cache
-    S = k_cache.shape[1]
+    B = x.shape[0]
+    if pos is None:
+        pos = jnp.full((B, 1), k_cache.shape[1], jnp.int32)
+    cos, sin = nn.rope_at(cfg.hd, pos, cfg.rope_theta, x.dtype)
     q, k, v = _project_qkv(cfg, p, x)
-    pos = jnp.full((x.shape[0], 1), S, jnp.int32)
-    q = nn.apply_rope(q, cos, sin, pos)
-    k = nn.apply_rope(k, cos, sin, pos)
-    o = attention.decode_attention(q, k_cache, v_cache, k, v, window=window)
-    out = nn.dense(o.reshape(x.shape[0], 1, -1), p["attn"]["wo"])
+    q = nn.apply_rope_direct(q, cos, sin)
+    k = nn.apply_rope_direct(k, cos, sin)
+    o = attention.decode_attention(
+        q, k_cache, v_cache, k, v, window=window,
+        valid_len=valid_len, kv_pos=kv_pos, q_pos=pos[:, 0],
+    )
+    out = nn.dense(o.reshape(B, 1, -1), p["attn"]["wo"])
     return out, (k, v)
 
 
@@ -184,19 +197,50 @@ def decoder(cfg: ModelConfig, params, x, rope):
     return y, caches
 
 
-def decoder_decode(cfg: ModelConfig, params, x, rope, caches):
+def decoder_decode(cfg: ModelConfig, params, x, caches):
     """Single-token decode through the layer stack; caches: stacked
-    (L, B, S, HK, hd) pair. Returns (y, new_kv stacked (L, B, 1, HK, hd))."""
+    (L, B, S, HK, hd) pair holding exactly the S previous positions.
+    Returns (y, new_kv stacked (L, B, 1, HK, hd)) — the caller appends
+    the new KV (growing cache; see repro.serve.oracle)."""
 
     def body(h, inp):
         lp, kc, vc = inp
-        a, new_kv = attn_block_decode(cfg, lp, _norm(cfg, h, lp, "norm1"), rope, (kc, vc))
+        a, new_kv = attn_block_decode(
+            cfg, lp, _norm(cfg, h, lp, "norm1"), (kc, vc), window=cfg.window
+        )
         h = h + a
         h = h + _ffn(cfg, lp, _norm(cfg, h, lp, "norm2"))
         return h, new_kv
 
     y, new_kv = jax.lax.scan(body, x, (params["layers"],) + tuple(caches))
     return y, new_kv
+
+
+def decoder_decode_slots(cfg: ModelConfig, params, x, caches, lengths):
+    """Slot-pool decode: one token per slot against a preallocated
+    cache.  x: (N, 1, D); caches: stacked (L, N, S_max, HK, hd) pair;
+    lengths (N,): valid cache rows per slot (== the absolute position
+    of the incoming token).  The new KV is written in place at row
+    ``lengths`` per slot.  Returns (y, (k, v) updated caches)."""
+    N, S = x.shape[0], caches[0].shape[2]
+    pos = lengths[:, None]
+    write = jnp.minimum(lengths, S - 1)
+    rows = jnp.arange(N)
+
+    def body(h, inp):
+        lp, kc, vc = inp
+        a, (nk, nv) = attn_block_decode(
+            cfg, lp, _norm(cfg, h, lp, "norm1"), (kc, vc),
+            pos=pos, valid_len=lengths, window=cfg.window,
+        )
+        kc = kc.at[rows, write].set(nk[:, 0])
+        vc = vc.at[rows, write].set(nv[:, 0])
+        h = h + a
+        h = h + _ffn(cfg, lp, _norm(cfg, h, lp, "norm2"))
+        return h, (kc, vc)
+
+    y, new_caches = jax.lax.scan(body, x, (params["layers"],) + tuple(caches))
+    return y, new_caches
 
 
 def embed_tokens(cfg: ModelConfig, params, tokens, dtype):

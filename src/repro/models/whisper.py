@@ -128,13 +128,11 @@ def decode_step(cfg: ModelConfig, params, tokens, self_cache, cross_kv):
     cross_kv: (k, v) stacked (L, B, enc_len, HK, hd) cached at prefill."""
     dtype = jnp.dtype(cfg.compute_dtype)
     x = params["embed"].astype(dtype)[tokens]
-    S = self_cache[0].shape[2]
-    rope = nn.rope_freqs(cfg.hd, S + 1, cfg.rope_theta, dtype)
 
     def body(h, inp):
         lp, kc, vc, ck, cv = inp
         a, new_kv = transformer.attn_block_decode(
-            cfg, lp, _norm(cfg, h, lp, "norm1"), rope, (kc, vc)
+            cfg, lp, _norm(cfg, h, lp, "norm1"), (kc, vc)
         )
         h = h + a
         hn = _norm(cfg, h, lp, "norm_cross")

@@ -115,28 +115,47 @@ def forward(cfg: ModelConfig, params, tokens, last_only: bool = False):
 
 
 def init_state(cfg: ModelConfig, batch: int, window_cache: int):
-    """Decode state: per-mamba-layer SSD states + shared-attn window KV."""
+    """Decode state: per-mamba-layer SSD states + a PER-GROUP shared-attn
+    KV ring (the shared block reuses *weights* across its G applications,
+    not KV — each depth sees different activations and needs its own
+    cache).  Ring row ``pos % W`` holds the RoPE-rotated KV of absolute
+    position ``pos``; ``kv_pos`` records each row's absolute position
+    (-1 = empty) so attention can mask emptiness and the sliding window
+    without ever reordering the ring.  With ``cfg.window`` set the ring
+    need only be ``window`` rows; without it, size it to the full
+    sequence (the ring must not wrap)."""
     groups, per_group, tail = _layout(cfg)
     d_in = cfg.ssm_expand * cfg.d_model
     H, P, N = d_in // 64, 64, cfg.ssm_state
     hk, hd = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.compute_dtype)
+    W = max(int(window_cache), 1)
     return {
         "ssm_groups": jnp.zeros((groups, per_group, batch, H, P, N), jnp.float32),
         "ssm_tail": jnp.zeros((tail, batch, H, P, N), jnp.float32),
-        "attn_k": jnp.zeros((batch, window_cache, hk, hd), jnp.dtype(cfg.compute_dtype)),
-        "attn_v": jnp.zeros((batch, window_cache, hk, hd), jnp.dtype(cfg.compute_dtype)),
+        "attn_k": jnp.zeros((groups, batch, W, hk, hd), dt),
+        "attn_v": jnp.zeros((groups, batch, W, hk, hd), dt),
+        "kv_pos": jnp.full((batch, W), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 
-def decode(cfg: ModelConfig, params, tokens, state, pos):
-    """One-token decode. state: see init_state. pos: current position."""
+def decode(cfg: ModelConfig, params, tokens, state):
+    """One-token decode. state: see init_state; per-sequence positions
+    are carried in ``state['pos']``, so slots of a serving pool can sit
+    at different depths in the same batch."""
     dtype = jnp.dtype(cfg.compute_dtype)
     x = params["embed"].astype(dtype)[tokens]
-    rope = nn.rope_freqs(cfg.hd, int(state["attn_k"].shape[1]) + 1, cfg.rope_theta, dtype)
+    B = x.shape[0]
+    pos = state["pos"]
+    kv_pos = state["kv_pos"]
+    W = state["attn_k"].shape[2]
+    write = pos % W
+    rows = jnp.arange(B)
     groups, per_group, tail = _layout(cfg)
 
     def group_body(h, inp):
-        gp, st = inp
+        gp, st, kc, vc = inp
 
         def inner(h2, inp2):
             lp, s2 = inp2
@@ -145,15 +164,22 @@ def decode(cfg: ModelConfig, params, tokens, state, pos):
 
         h, st_new = jax.lax.scan(inner, h, (gp, st))
         sp = params["shared_attn"]
-        a, kv = transformer.attn_block_decode(
-            cfg, sp, nn.rms_norm(h, sp["norm1_w"]), rope,
-            (state["attn_k"], state["attn_v"]), window=cfg.window,
+        a, (nk, nv) = transformer.attn_block_decode(
+            cfg, sp, nn.rms_norm(h, sp["norm1_w"]), (kc, vc),
+            pos=pos[:, None], kv_pos=kv_pos, window=cfg.window,
         )
+        # overwrite the oldest ring row (its position pos - W is outside
+        # the window, so attention above never saw it)
+        kc = kc.at[rows, write].set(nk[:, 0])
+        vc = vc.at[rows, write].set(nv[:, 0])
         h = h + a
         h = h + transformer.mlp_block(cfg, sp, nn.rms_norm(h, sp["norm2_w"]))
-        return h, st_new
+        return h, (st_new, kc, vc)
 
-    x, ssm_groups = jax.lax.scan(group_body, x, (params["groups"], state["ssm_groups"]))
+    x, (ssm_groups, attn_k, attn_v) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], state["ssm_groups"], state["attn_k"], state["attn_v"]),
+    )
     ssm_tail = state["ssm_tail"]
     if tail:
         def tail_body(h, inp2):
@@ -164,6 +190,28 @@ def decode(cfg: ModelConfig, params, tokens, state, pos):
         x, ssm_tail = jax.lax.scan(tail_body, x, (params["tail"], state["ssm_tail"]))
     x = nn.rms_norm(x, params["final_w"])
     logits = nn.dense(x, params["lm_head"])
-    # slide the shared window cache by one (ring-buffer style shift)
-    new_state = dict(state, ssm_groups=ssm_groups, ssm_tail=ssm_tail)
+    new_state = {
+        "ssm_groups": ssm_groups,
+        "ssm_tail": ssm_tail,
+        "attn_k": attn_k,
+        "attn_v": attn_v,
+        "kv_pos": kv_pos.at[rows, write].set(pos),
+        "pos": pos + 1,
+    }
     return logits, new_state
+
+
+def prefill(cfg: ModelConfig, params, tokens, window_cache: int):
+    """Prompt prefill as a jitted scan of single-token decodes — bitwise
+    identical to stepping ``decode`` (the slot-pool engine's oracle
+    guarantee), with one compile per prompt-length bucket.  Returns
+    (last-token logits (B, 1, V), decode state at position T)."""
+    B, T = tokens.shape
+    state0 = init_state(cfg, B, window_cache)
+
+    def step(st, tok):
+        logits, st = decode(cfg, params, tok[:, None], st)
+        return st, logits[:, 0]
+
+    state, logits = jax.lax.scan(step, state0, tokens.T)
+    return logits[-1][:, None], state

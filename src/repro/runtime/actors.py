@@ -53,6 +53,8 @@ class ClientSpec:
     straggler_fraction: float = 0.0
     straggler_delay_s: float = 0.5
     idle_timeout_s: float = 0.2
+    compilation_cache_dir: Optional[str] = None  # persistent jax
+    #   compilation cache for spawned workers (see _setup_compilation_cache)
 
 
 def _is_straggler(spec: ClientSpec, rnd: int) -> bool:
@@ -62,7 +64,29 @@ def _is_straggler(spec: ClientSpec, rnd: int) -> bool:
     return bool(rng.random() < spec.straggler_fraction)
 
 
+def _setup_compilation_cache(cache_dir: str) -> None:
+    """Point this worker at a persistent on-disk jax compilation cache.
+    Every spawned client process traces the same workload jits from
+    scratch; a shared cache dir turns N identical compiles into one
+    compile plus N-1 disk loads, and survives across rounds and runs.
+    Best-effort: a worker must never die over a cache misconfig."""
+    import os
+
+    try:
+        import jax
+
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # cache tiny/fast client kernels too (defaults skip them)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:  # noqa: BLE001
+        pass
+
+
 def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
+    if spec.compilation_cache_dir:
+        _setup_compilation_cache(spec.compilation_cache_dir)
     grad = spec.workload.build()
     while True:
         ann = endpoint.recv_latest(timeout=spec.idle_timeout_s)

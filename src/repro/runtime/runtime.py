@@ -14,6 +14,8 @@ jitted codec from `runtime.protocol`.
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -72,6 +74,11 @@ class RuntimeConfig:
     # transport
     transport: str = "thread"  # thread | process
     drop_prob: float = 0.0
+    # persistent jax compilation cache shipped to spawned workers; None
+    # auto-derives a shared dir under the system tempdir for the
+    # process transport (threads share the parent's in-memory jit cache
+    # already and get nothing from it)
+    compilation_cache_dir: Optional[str] = None
 
 
 class AsyncFederatedRuntime:
@@ -103,6 +110,10 @@ class AsyncFederatedRuntime:
             bits_per_coord_analytic=analytic_bits_per_coord(
                 fl.mechanism, fl.n_clients, fl.sigma, fl.clip)
         )
+        cache_dir = cfg.compilation_cache_dir
+        if cache_dir is None and cfg.transport == "process":
+            cache_dir = os.path.join(tempfile.gettempdir(),
+                                     "repro-jax-cache")
         specs = [
             ClientSpec(
                 client_id=i, seed=fl.seed, proto=self.proto,
@@ -110,6 +121,7 @@ class AsyncFederatedRuntime:
                 retry_backoff_s=cfg.retry_backoff_s,
                 straggler_fraction=cfg.straggler_fraction,
                 straggler_delay_s=cfg.straggler_delay_s,
+                compilation_cache_dir=cache_dir,
             )
             for i in range(fl.n_clients)
         ]

@@ -1,0 +1,6 @@
+"""Continuous-batching serve engine (slot-pool KV caches) + the naive
+oracle loop it is tested against."""
+from repro.serve.engine import EngineConfig, Prefix, ServeEngine
+from repro.serve.oracle import naive_generate
+
+__all__ = ["EngineConfig", "Prefix", "ServeEngine", "naive_generate"]

@@ -1,0 +1,313 @@
+"""Continuous-batching decode engine over a fixed pool of KV-cache slots.
+
+MaxEngine-style serving: one resident decode computation over a
+``max_slots``-wide state whose shapes never change, so the decode step
+compiles exactly once.  Requests stream through three phases:
+
+  prefill(params, tokens)  -> (logits, Prefix)   # run the prompt
+  insert(state, prefix, slot)                    # copy prefix -> slot
+  generate_step(params, state) -> (state, tokens, done)
+
+Each slot is independent: slots sit at different sequence depths
+(per-slot ``lengths``), finish at different times (EOS / per-request
+``max_gen`` / cache capacity), and are re-inserted into without
+touching neighbours.  Inactive slots are frozen bitwise — the family
+``select`` merge reverts every cache row the batched step speculatively
+computed for them — which is what makes full-occupancy engine decode
+token-identical to the naive one-request loop (repro.serve.oracle).
+
+Families: dense/moe (slot-pool KV cache with ``valid_len`` masking —
+padded rows score NEG_INF, exp underflows to exact 0.0), rwkv6
+(constant-size recurrent state), zamba2 (SSM states + per-group
+ring-window KV with absolute-position ``kv_pos`` masking).  whisper /
+llava need per-request side inputs (frames / patches) and raise
+NotImplementedError.
+
+Retrace policy: ``generate_step`` and ``insert`` compile once (slot
+index is traced); ``prefill`` compiles once per prompt-length bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry, rwkv6, transformer, zamba2
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4
+    max_prefill_len: int = 64
+    max_gen_len: int = 32
+    eos_id: Optional[int] = None
+
+    @property
+    def max_seq_len(self) -> int:
+        return self.max_prefill_len + self.max_gen_len
+
+
+@dataclasses.dataclass
+class Prefix:
+    """A prefilled prompt, ready to insert into a slot."""
+
+    cache: Any            # per-family cache tree, batch dim = 1
+    length: int           # prompt length P
+    next_token: Any       # () int32 — first generated token (greedy)
+    last_logits: Any      # (1, 1, V) last-position prompt logits
+
+
+def _where_axis(keep, new, old, axis):
+    """new where keep (broadcast along ``axis``), else old."""
+    shape = [1] * new.ndim
+    shape[axis] = keep.shape[0]
+    return jnp.where(keep.reshape(shape).astype(bool), new, old)
+
+
+# ------------------------------------------------------------- families
+class _DenseFamily:
+    """dense / moe: preallocated (L, N, S_max, HK, hd) KV slot pool.
+
+    ``decoder_decode_slots`` masks rows >= lengths[slot] with NEG_INF so
+    stale rows contribute exact-zero probability; per-slot RoPE comes
+    from position-direct ``rope_at``.
+    """
+
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig):
+        self.cfg, self.ecfg = cfg, ecfg
+        self.capacity = ecfg.max_seq_len
+        self._axes = {"k": 1, "v": 1}  # slot axis per leaf
+
+    def init_cache(self):
+        cfg, N, S = self.cfg, self.ecfg.max_slots, self.ecfg.max_seq_len
+        dt = jnp.dtype(cfg.compute_dtype)
+        z = jnp.zeros((cfg.n_layers, N, S, cfg.n_kv_heads, cfg.hd), dt)
+        return {"k": z, "v": z}
+
+    def prefill(self, params, tokens):
+        logits, caches = transformer.forward(
+            self.cfg, params, tokens, last_only=True)
+        return logits, {"k": caches[0], "v": caches[1]}
+
+    def insert(self, cache, prefix_cache, slot):
+        P = prefix_cache["k"].shape[2]  # static (one trace per P bucket)
+        return {
+            k: cache[k].at[:, slot, :P].set(prefix_cache[k][:, 0])
+            for k in ("k", "v")
+        }
+
+    def step(self, params, tokens, cache, state):
+        cfg = self.cfg
+        x = transformer.embed_tokens(
+            cfg, params, tokens, jnp.dtype(cfg.compute_dtype))
+        y, (k, v) = transformer.decoder_decode_slots(
+            cfg, params, x, (cache["k"], cache["v"]), state["lengths"])
+        y = transformer._norm(cfg, y, params, "final")
+        return transformer.unembed(cfg, params, y), {"k": k, "v": v}
+
+    def select(self, keep, new, old):
+        return {k: _where_axis(keep, new[k], old[k], self._axes[k])
+                for k in new}
+
+
+class _Rwkv6Family:
+    """rwkv6: constant-size recurrent state (wkv matrix + shift tokens)."""
+
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig):
+        self.cfg, self.ecfg = cfg, ecfg
+        self.capacity = None  # recurrent: no cache-length limit
+
+    def init_cache(self):
+        return rwkv6.init_state(self.cfg, self.ecfg.max_slots)
+
+    def prefill(self, params, tokens):
+        return rwkv6.prefill(self.cfg, params, tokens)
+
+    def insert(self, cache, prefix_cache, slot):
+        return jax.tree.map(
+            lambda c, p: c.at[:, slot].set(p[:, 0]), cache, prefix_cache)
+
+    def step(self, params, tokens, cache, state):
+        return rwkv6.decode(self.cfg, params, tokens, cache)
+
+    def select(self, keep, new, old):
+        return jax.tree.map(
+            lambda n, o: _where_axis(keep, n, o, 1), new, old)
+
+
+class _Zamba2Family:
+    """zamba2 hybrid: per-layer SSD states + per-group shared-attn KV
+    ring with absolute-position (kv_pos) masking.  The family carries
+    its own per-slot ``pos`` inside the cache; the engine's ``lengths``
+    bookkeeping mirrors it."""
+
+    _AXES = {"ssm_groups": 2, "ssm_tail": 1, "attn_k": 1, "attn_v": 1,
+             "kv_pos": 0, "pos": 0}
+
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig):
+        self.cfg, self.ecfg = cfg, ecfg
+        if cfg.window:
+            self.window_cache = min(cfg.window, ecfg.max_seq_len)
+            self.capacity = None  # ring slides under the window
+        else:
+            self.window_cache = ecfg.max_seq_len  # ring must not wrap
+            self.capacity = ecfg.max_seq_len
+
+    def init_cache(self):
+        return zamba2.init_state(
+            self.cfg, self.ecfg.max_slots, self.window_cache)
+
+    def prefill(self, params, tokens):
+        return zamba2.prefill(self.cfg, params, tokens, self.window_cache)
+
+    def insert(self, cache, prefix_cache, slot):
+        out = {}
+        for k, c in cache.items():
+            p = prefix_cache[k]
+            if k == "ssm_groups":          # (G, pg, B, ...)
+                out[k] = c.at[:, :, slot].set(p[:, :, 0])
+            elif k in ("kv_pos", "pos"):   # (B, ...)
+                out[k] = c.at[slot].set(p[0])
+            else:                          # (G|tail, B, ...)
+                out[k] = c.at[:, slot].set(p[:, 0])
+        return out
+
+    def step(self, params, tokens, cache, state):
+        return zamba2.decode(self.cfg, params, tokens, cache)
+
+    def select(self, keep, new, old):
+        return {k: _where_axis(keep, new[k], old[k], self._AXES[k])
+                for k in new}
+
+
+def _make_family(cfg: ModelConfig, ecfg: EngineConfig):
+    if cfg.kind in ("dense", "moe"):
+        return _DenseFamily(cfg, ecfg)
+    if cfg.kind == "rwkv6":
+        return _Rwkv6Family(cfg, ecfg)
+    if cfg.kind == "zamba2":
+        return _Zamba2Family(cfg, ecfg)
+    raise NotImplementedError(
+        f"serve engine does not support kind={cfg.kind!r} "
+        "(whisper/llava need per-request frames/patches; use the naive "
+        "loop in repro.serve.oracle)")
+
+
+# --------------------------------------------------------------- engine
+class ServeEngine:
+    """Fixed-slot continuous-batching engine for one model family."""
+
+    def __init__(self, cfg: ModelConfig, *, max_slots: int = 4,
+                 max_prefill_len: int = 64, max_gen_len: int = 32,
+                 eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.ecfg = EngineConfig(max_slots, max_prefill_len, max_gen_len,
+                                 eos_id)
+        self.family = _make_family(cfg, self.ecfg)
+        self._prefill_jit = jax.jit(self._prefill_impl)
+        self._insert_jit = jax.jit(self._insert_impl)
+        self._step_jit = jax.jit(self._step_impl)
+
+    # ---------------------------------------------------------- state
+    def init_state(self) -> Dict[str, Any]:
+        N = self.ecfg.max_slots
+        i32 = lambda: jnp.zeros((N,), jnp.int32)
+        return {
+            "cache": self.family.init_cache(),
+            "tokens": i32(),    # last emitted token per slot
+            "lengths": i32(),   # sequence depth (cache rows in use)
+            "gen": i32(),       # tokens emitted so far per request
+            "max_gen": i32(),   # per-request generation budget
+            "active": jnp.zeros((N,), bool),
+        }
+
+    def occupancy(self, state) -> float:
+        return float(jnp.mean(state["active"].astype(jnp.float32)))
+
+    def free_slots(self, state):
+        import numpy as np
+
+        return [int(i) for i in np.flatnonzero(~np.asarray(state["active"]))]
+
+    # -------------------------------------------------------- prefill
+    def _prefill_impl(self, params, tokens):
+        logits, cache = self.family.prefill(params, tokens)
+        tok = jnp.clip(jnp.argmax(logits[:, -1], axis=-1),
+                       0, self.cfg.vocab - 1).astype(jnp.int32)[0]
+        return logits, cache, tok
+
+    def prefill(self, params, tokens) -> Tuple[Any, Prefix]:
+        """Run one prompt (1D or (1, P) int32).  Returns (last-position
+        logits (1, 1, V), Prefix).  One compile per distinct P."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        P = tokens.shape[1]
+        if not 0 < P <= self.ecfg.max_prefill_len:
+            raise ValueError(
+                f"prompt length {P} not in (0, {self.ecfg.max_prefill_len}]")
+        logits, cache, tok = self._prefill_jit(params, tokens)
+        return logits, Prefix(cache=cache, length=P, next_token=tok,
+                              last_logits=logits)
+
+    # --------------------------------------------------------- insert
+    def _insert_impl(self, state, prefix_cache, slot, tok, length, max_gen):
+        return {
+            "cache": self.family.insert(state["cache"], prefix_cache, slot),
+            "tokens": state["tokens"].at[slot].set(tok),
+            "lengths": state["lengths"].at[slot].set(length),
+            "gen": state["gen"].at[slot].set(1),   # prefill emitted one
+            "max_gen": state["max_gen"].at[slot].set(max_gen),
+            "active": state["active"].at[slot].set(max_gen > 1),
+        }
+
+    def insert(self, state, prefix: Prefix, slot: int,
+               max_gen: Optional[int] = None) -> Dict[str, Any]:
+        """Copy a prefilled prompt into ``slot`` (evicting whatever was
+        there).  ``max_gen`` caps this request's emitted tokens
+        (prefill token included); clamped to the engine budget."""
+        mg = self.ecfg.max_gen_len if max_gen is None else int(max_gen)
+        mg = max(1, min(mg, self.ecfg.max_gen_len))
+        return self._insert_jit(
+            state, prefix.cache, jnp.int32(slot),
+            jnp.asarray(prefix.next_token, jnp.int32),
+            jnp.int32(prefix.length), jnp.int32(mg))
+
+    # ----------------------------------------------------------- step
+    def _step_impl(self, params, state):
+        active = state["active"]
+        cache = state["cache"]
+        logits, new_cache = self.family.step(
+            params, state["tokens"][:, None], cache, state)
+        new_cache = self.family.select(active, new_cache, cache)
+        tok = jnp.clip(jnp.argmax(logits[:, -1], axis=-1),
+                       0, self.cfg.vocab - 1).astype(jnp.int32)
+        tok = jnp.where(active, tok, state["tokens"])
+        act = active.astype(jnp.int32)
+        gen = state["gen"] + act
+        lengths = state["lengths"] + act
+        done = active & (gen >= state["max_gen"])
+        if self.ecfg.eos_id is not None:
+            done = done | (active & (tok == self.ecfg.eos_id))
+        if self.family.capacity is not None:
+            done = done | (active & (lengths >= self.family.capacity))
+        new_state = {
+            "cache": new_cache,
+            "tokens": tok,
+            "lengths": lengths,
+            "gen": gen,
+            "max_gen": state["max_gen"],
+            "active": active & ~done,
+        }
+        return new_state, tok, done
+
+    def generate_step(self, params, state):
+        """One batched decode step over every slot.  Returns
+        (new_state, tokens (N,), done (N,)); ``tokens[i]`` is fresh only
+        where ``state['active'][i]`` was True, and ``done`` marks slots
+        that just finished (EOS / max_gen / capacity) and may be
+        re-inserted into."""
+        return self._step_jit(params, state)

@@ -1,0 +1,76 @@
+"""Naive one-batch generation loop, kept as the engine's correctness
+oracle.
+
+This is the pre-engine serving path: every request in one batch, decode
+steps the whole batch in lockstep, dense caches *grow* by one row per
+step (so each decode step retraces — the compile-per-length cost the
+slot-pool engine exists to remove).
+
+The dense append here fixes a bug the old launch loop shipped with: it
+"appended" via ``concatenate([cache[:, :, 1:], new_kv])``, silently
+dropping the first cached position every step, so generation past the
+first token attended to a truncated prompt.  The oracle grows the cache
+instead and never drops a position; sliding-window archs rely on the
+position masking inside ``decode_attention`` (a dropped row is only
+correct once the row actually leaves the window).
+
+``ServeEngine`` at full occupancy must be token-identical to this loop:
+same rope ops (``rope_at`` positions), same greedy argmax+clip, and the
+engine's padded cache rows contribute exact-zero probability.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry, rwkv6, zamba2
+from repro.models.config import ModelConfig
+
+
+def _greedy(cfg: ModelConfig, logits):
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return jnp.clip(tok, 0, cfg.vocab - 1)
+
+
+def naive_generate(cfg: ModelConfig, params, prompts: Dict, n_tokens: int):
+    """Greedy-decode ``n_tokens`` per sequence (the prefill argmax plus
+    n_tokens - 1 decode steps).  ``prompts``: batch dict with tokens
+    (B, P) [+ patches for llava].  Returns (B, n_tokens) int32."""
+    if cfg.kind == "whisper":
+        raise NotImplementedError(
+            "whisper serving needs an encoder pass + cross-KV plumbing; "
+            "not covered by the naive oracle")
+    tokens = prompts["tokens"]
+    B, P = tokens.shape
+    serve = jax.jit(registry.serve_fn(cfg))
+
+    if cfg.kind in registry.DENSE_KINDS:
+        logits, caches = jax.jit(registry.prefill_fn(cfg))(params, prompts)
+        cache = {"k": caches[0], "v": caches[1]}
+    else:
+        horizon = P + n_tokens
+        if cfg.kind == "rwkv6":
+            cache = rwkv6.init_state(cfg, B)
+        else:
+            cache = zamba2.init_state(cfg, B, min(cfg.window or horizon, horizon))
+        logits = None
+        for t in range(P):
+            logits, cache = serve(
+                params, {"tokens": tokens[:, t:t + 1]}, cache)
+
+    tok = _greedy(cfg, logits)
+    out = [tok]
+    for _ in range(n_tokens - 1):
+        logits, new_kv = serve(params, {"tokens": tok}, cache)
+        if cfg.kind in registry.DENSE_KINDS:
+            # grow the cache; never drop a cached position (see module
+            # docstring for the bug this replaces)
+            cache = {"k": jnp.concatenate([cache["k"], new_kv[0]], axis=2),
+                     "v": jnp.concatenate([cache["v"], new_kv[1]], axis=2)}
+        else:
+            cache = new_kv
+        tok = _greedy(cfg, logits)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
