@@ -1,13 +1,17 @@
 """Async runtime benchmark: rounds/sec and bits/round vs staleness
-bound and straggler fraction (ISSUE 6 acceptance grid).
+bound, straggler fraction, and injected client-crash rate.
 
 Grid: staleness bound in {0, 1, 4} x wall-clock straggler fraction in
-{0.0, 0.3}, quadratic workload (d = 4096, 8 clients, thread transport,
-aggregate_gaussian per-tensor).  The round timeout is shorter than the
-straggler delay, so a straggling client misses its round's deadline and
-its update lands in a LATER round: at bound 0 it is rejected (occupancy
-drops), at bound >= 1 it is accepted stale and down-weighted — the
-trade the benchmark quantifies.
+{0.0, 0.3} x client-crash rate in {0.0, 0.2}, quadratic workload
+(d = 4096, 8 clients, thread transport, aggregate_gaussian per-tensor).
+The round timeout is shorter than the straggler delay, so a straggling
+client misses its round's deadline and its update lands in a LATER
+round: at bound 0 it is rejected (occupancy drops), at bound >= 1 it is
+accepted stale and down-weighted — the trade the benchmark quantifies.
+Crash cells inject seeded transient client crashes (the chaos harness,
+`repro.runtime.chaos`): a crashed client misses its round(s) and
+rejoins, and the fault columns (degraded rounds, mean recovery rounds,
+rounds/sec under faults) quantify the cost.
 
     PYTHONPATH=src python -m benchmarks.bench_runtime --out BENCH_runtime.json
 """
@@ -19,28 +23,43 @@ import json
 import numpy as np
 
 from repro.fl.federated import FLConfig
-from repro.runtime import AsyncFederatedRuntime, QuadraticWorkload, RuntimeConfig
+from repro.runtime import (
+    AsyncFederatedRuntime,
+    FaultPlan,
+    QuadraticWorkload,
+    RuntimeConfig,
+)
 from repro.runtime import protocol
 
 STALENESS_BOUNDS = (0, 1, 4)
 STRAGGLER_FRACTIONS = (0.0, 0.3)
+CRASH_RATES = (0.0, 0.2)
 
 N_CLIENTS = 8
 DIM = 4096
 ROUNDS = 12
 
 
-def run_cell(bound: int, straggler: float, *, rounds: int = ROUNDS) -> dict:
+def run_cell(bound: int, straggler: float, crash_rate: float = 0.0, *,
+             rounds: int = ROUNDS) -> dict:
     fl = FLConfig(
         n_clients=N_CLIENTS, mechanism="aggregate_gaussian", sigma=1e-3,
         clip=2.0, lr=0.3, seed=17,
         mech_kwargs=(("per_coord", False),),
     )
+    # transient crashes: the client goes silent past the round deadline
+    # and rejoins before the heartbeat timeout would evict it — the cost
+    # shows up as degraded rounds and recovery time, not as churn
+    chaos = (FaultPlan(seed=17, client_crash_rate=crash_rate,
+                       rejoin_after_s=0.5)
+             if crash_rate > 0.0 else None)
     rc = RuntimeConfig(
         fl=fl, staleness_bound=bound, staleness_weighting="inverse",
         quorum=0.6, round_timeout_s=0.3, poll_interval_s=0.002,
         transport="thread",
         straggler_fraction=straggler, straggler_delay_s=0.6,
+        heartbeat_timeout_s=1.0 if chaos is not None else None,
+        chaos=chaos,
     )
     wl = QuadraticWorkload(N_CLIENTS, DIM, seed=17)
     rt = AsyncFederatedRuntime(rc, wl)
@@ -66,6 +85,15 @@ def run(emit) -> None:
                  f"occupancy={s['mean_cohort_occupancy']:.2f}")
             emit(f"{tag}_bits_per_round", round(s["bits_per_round"], 1),
                  f"stale_used={s['stale_updates_used']}")
+    # fault cells: crash-rate 0.2 at each staleness bound (no stragglers
+    # so the degradation is attributable to the injected crashes alone)
+    for bound in STALENESS_BOUNDS:
+        s = run_cell(bound, 0.0, 0.2, rounds=6)
+        tag = f"runtime/s{bound}_crash0.2"
+        emit(f"{tag}_rounds_per_sec", round(s["rounds_per_sec"], 3),
+             f"degraded={s['degraded_rounds']}")
+        emit(f"{tag}_recovery_rounds", round(s["recovery_rounds_mean"], 2),
+             f"evictions={s['evictions']} joins={s['joins']}")
 
 
 def main() -> None:
@@ -77,25 +105,38 @@ def main() -> None:
     cells = []
     for bound in STALENESS_BOUNDS:
         for straggler in STRAGGLER_FRACTIONS:
-            s = run_cell(bound, straggler, rounds=args.rounds)
-            cells.append({
-                "staleness_bound": bound,
-                "straggler_fraction": straggler,
-                "rounds": s["rounds"],
-                "rounds_per_sec": s["rounds_per_sec"],
-                "bits_per_round": s["bits_per_round"],
-                "mean_round_latency_s": s["mean_round_latency_s"],
-                "mean_cohort_occupancy": s["mean_cohort_occupancy"],
-                "staleness_hist": s["staleness_hist"],
-                "stale_updates_used": s["stale_updates_used"],
-                "rejected_stale": s["rejected_stale"],
-                "bits_per_coord_analytic": s.get("bits_per_coord_analytic"),
-            })
-            print(f"bound={bound} straggler={straggler}: "
-                  f"{s['rounds_per_sec']:.2f} rounds/s, "
-                  f"{s['bits_per_round']:.0f} bits/round, "
-                  f"occupancy {s['mean_cohort_occupancy']:.2f}, "
-                  f"stale used {s['stale_updates_used']}")
+            for crash_rate in CRASH_RATES:
+                s = run_cell(bound, straggler, crash_rate,
+                             rounds=args.rounds)
+                cells.append({
+                    "staleness_bound": bound,
+                    "straggler_fraction": straggler,
+                    "client_crash_rate": crash_rate,
+                    "rounds": s["rounds"],
+                    "rounds_per_sec": s["rounds_per_sec"],
+                    "bits_per_round": s["bits_per_round"],
+                    "mean_round_latency_s": s["mean_round_latency_s"],
+                    "mean_cohort_occupancy": s["mean_cohort_occupancy"],
+                    "staleness_hist": s["staleness_hist"],
+                    "stale_updates_used": s["stale_updates_used"],
+                    "rejected_stale": s["rejected_stale"],
+                    "bits_per_coord_analytic": s.get(
+                        "bits_per_coord_analytic"),
+                    # fault columns (chaos harness)
+                    "degraded_rounds": s["degraded_rounds"],
+                    "recovery_rounds_mean": s["recovery_rounds_mean"],
+                    "evictions": s["evictions"],
+                    "joins": s["joins"],
+                    "learner_restarts": s.get("learner_restarts", 0),
+                })
+                print(f"bound={bound} straggler={straggler} "
+                      f"crash={crash_rate}: "
+                      f"{s['rounds_per_sec']:.2f} rounds/s, "
+                      f"{s['bits_per_round']:.0f} bits/round, "
+                      f"occupancy {s['mean_cohort_occupancy']:.2f}, "
+                      f"stale used {s['stale_updates_used']}, "
+                      f"degraded {s['degraded_rounds']}, "
+                      f"recovery {s['recovery_rounds_mean']:.2f}")
     out = {
         "benchmark": "async_runtime",
         "n_clients": N_CLIENTS,

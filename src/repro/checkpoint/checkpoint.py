@@ -1,21 +1,48 @@
-"""Sharded checkpointing with elastic restore (pure JAX + numpy).
+"""Async, per-host-sharded checkpointing with elastic restore.
 
-Format: one ``<step>/arrays.npz`` holding every leaf (gathered to host)
-plus ``meta.json`` (step, leaf paths, mesh shape at save time).  Restore
-``device_put``s each leaf with the *target* mesh's shardings — restoring
-onto a different mesh (elastic scale up/down) is therefore free, which
-is the fault-tolerance story: any pod count can resume any checkpoint.
+Layout of one checkpoint::
 
-For 1000+-node deployments the same layout shards the npz per host
-(``shard_index`` argument) so no host materializes the full state; the
-single-host path below is what the tests exercise.
+    <dir>/step_<00000042>/
+        arrays-00000-of-00002.npz   # shard 0's leaf subset
+        arrays-00001-of-00002.npz   # shard 1's leaf subset
+        shard-00000.ok              # per-shard landed marker
+        shard-00001.ok
+        meta.json                   # COMMIT MARKER (atomic, last)
+
+Commit protocol (crash safety):
+
+  1. every shard writes its npz to ``*.tmp`` and ``os.replace``s it into
+     place — a crash mid-write never leaves a partial npz under the
+     final name;
+  2. a shard that landed drops its ``shard-<i>.ok`` marker;
+  3. ``meta.json`` (itself tmp + ``os.replace``) is written only once
+     **every** marker is present — the commit barrier.  A step directory
+     without ``meta.json`` is uncommitted and invisible to
+     ``latest_step``; retention GC deletes it.
+
+Sharding: leaves are partitioned over ``num_shards`` hosts by striping
+the sorted key list, so no host materializes the full state.  Every host
+can compute the full key list from its own (structurally identical)
+pytree, which is what lets the *last* shard to land perform the commit.
+
+Elastic restore: a checkpoint stores host numpy plus the mesh axis
+sizes at save time; ``restore`` places each leaf with the *target*
+mesh's shardings, which callers resolve through the ``dist.sharding``
+rule tables (see ``train.steps.restore_train_state``) — the rule tables,
+not the checkpoint, are the single source of truth for placement, so a
+checkpoint written on a ``(pod=4, data, model)`` mesh restores onto
+``(pod=2, ...)`` or ``(pod=8, ...)`` unchanged.
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
 import re
-from typing import Any, Dict, Optional
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -23,7 +50,22 @@ import numpy as np
 PyTree = Any
 _SEP = "$"
 
+__all__ = [
+    "save",
+    "restore",
+    "latest_step",
+    "all_steps",
+    "garbage_collect",
+    "AsyncCheckpointer",
+    "CheckpointError",
+]
 
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is malformed (truncated, foreign, or incongruent)."""
+
+
+# ------------------------------------------------------------- flatten
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     flat, _ = jax.tree.flatten_with_path(tree)
     out = {}
@@ -33,46 +75,313 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return out
 
 
-def save(directory: str, step: int, state: PyTree, extra: Optional[Dict] = None):
-    d = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(d, exist_ok=True)
-    arrays = _flatten(state)
-    np.savez(os.path.join(d, "arrays.npz"), **arrays)
-    meta = {"step": int(step), "keys": sorted(arrays), **(extra or {})}
+def _tree_keys(tree: PyTree) -> List[str]:
+    flat, _ = jax.tree.flatten_with_path(tree)
+    return [
+        _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in flat
+    ]
+
+
+def shard_keys(keys: Sequence[str], shard_index: int, num_shards: int) -> List[str]:
+    """Deterministic leaf partition: stripe the sorted key list.  Every
+    host computes the same partition from its own pytree structure."""
+    return sorted(keys)[shard_index::num_shards]
+
+
+# ------------------------------------------------------- write + commit
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def _shard_name(shard_index: int, num_shards: int) -> str:
+    return f"arrays-{shard_index:05d}-of-{num_shards:05d}.npz"
+
+
+def _marker_name(shard_index: int) -> str:
+    return f"shard-{shard_index:05d}.ok"
+
+
+def _write_shard(d: str, arrays: Dict[str, np.ndarray], shard_index: int,
+                 num_shards: int) -> None:
+    """Write one shard's npz atomically (tmp + replace), then its
+    landed marker.  np.savez gets an open handle so it cannot append a
+    second .npz suffix to the tmp name."""
+    path = os.path.join(d, _shard_name(shard_index, num_shards))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    marker = os.path.join(d, _marker_name(shard_index))
+    with open(marker + ".tmp", "w") as f:
+        f.write("ok")
+    os.replace(marker + ".tmp", marker)
+
+
+def _all_shards_landed(d: str, num_shards: int) -> bool:
+    return all(
+        os.path.exists(os.path.join(d, _marker_name(i)))
+        for i in range(num_shards)
+    )
+
+
+def _commit(d: str, meta: Dict) -> None:
+    """Atomic commit marker: the checkpoint exists iff meta.json does."""
     tmp = os.path.join(d, "meta.json.tmp")
     with open(tmp, "w") as f:
         json.dump(meta, f)
-    os.replace(tmp, os.path.join(d, "meta.json"))  # atomic commit marker
+    os.replace(tmp, os.path.join(d, "meta.json"))
+
+
+def save(directory: str, step: int, state: PyTree,
+         extra: Optional[Dict] = None, *, shard_index: int = 0,
+         num_shards: int = 1, mesh_axes: Optional[Dict[str, int]] = None) -> str:
+    """Write this host's shard of ``state`` at ``step`` and commit when
+    every shard has landed.
+
+    Single-host callers keep the old ``save(dir, step, state)`` shape:
+    one shard, written and committed in one call.  Multi-host callers
+    each pass their ``shard_index`` — whichever host lands last sees all
+    markers present and performs the commit, so ``meta.json`` appears
+    only after the full state is on disk (the commit barrier).
+    """
+    if not 0 <= shard_index < num_shards:
+        raise ValueError(f"shard_index {shard_index} not in [0, {num_shards})")
+    d = _step_dir(directory, step)
+    os.makedirs(d, exist_ok=True)
+    arrays = _flatten(state)
+    keys = sorted(arrays)
+    mine = set(shard_keys(keys, shard_index, num_shards))
+    _write_shard(d, {k: arrays[k] for k in keys if k in mine},
+                 shard_index, num_shards)
+    if _all_shards_landed(d, num_shards):
+        meta = {
+            "step": int(step),
+            "keys": keys,
+            "num_shards": int(num_shards),
+            **({"mesh_axes": {k: int(v) for k, v in mesh_axes.items()}}
+               if mesh_axes else {}),
+            **(extra or {}),
+        }
+        _commit(d, meta)
     return d
 
 
-def latest_step(directory: str) -> Optional[int]:
+# ------------------------------------------------------------ discovery
+def all_steps(directory: str) -> List[int]:
+    """Committed steps (meta.json present), ascending."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         m = re.fullmatch(r"step_(\d+)", name)
         # only checkpoints with a committed meta.json count (crash safety)
         if m and os.path.exists(os.path.join(directory, name, "meta.json")):
             steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore(directory: str, step: int, like: PyTree, shardings: Optional[PyTree] = None):
-    """Restore into the structure of ``like``; ``shardings`` (a congruent
-    NamedSharding tree) places leaves onto the *current* mesh."""
-    d = os.path.join(directory, f"step_{step:08d}")
-    data = np.load(os.path.join(d, "arrays.npz"))
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def read_meta(directory: str, step: int) -> Dict:
+    d = _step_dir(directory, step)
+    path = os.path.join(d, "meta.json")
+    if not os.path.exists(path):
+        raise CheckpointError(f"step {step} in {directory} is not committed "
+                              f"(no meta.json)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def garbage_collect(directory: str, keep_last_k: Optional[int] = None,
+                    protect: Sequence[int] = ()) -> List[int]:
+    """Delete uncommitted step dirs older than the newest committed step
+    (stale partials from a crashed save) and, with ``keep_last_k``,
+    committed steps beyond the k newest.  The newest committed step is
+    never deleted.  ``protect`` shields in-flight steps an async saver
+    has not committed yet.  Returns the deleted step numbers."""
+    if not os.path.isdir(directory):
+        return []
+    committed = all_steps(directory)
+    newest = committed[-1] if committed else None
+    deleted = []
+    for name in sorted(os.listdir(directory)):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        step = int(m.group(1))
+        is_committed = step in committed
+        if step in protect:
+            continue
+        if not is_committed:
+            # partial write: only provably-stale ones (older than a
+            # committed successor) are safe to reap
+            if newest is not None and step < newest:
+                shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+                deleted.append(step)
+            continue
+        if keep_last_k is not None and step not in committed[-keep_last_k:]:
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+            deleted.append(step)
+    return deleted
+
+
+# -------------------------------------------------------------- restore
+def _leaf_key(path) -> str:
+    return _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def restore(directory: str, step: int, like: PyTree,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of ``like`` (leaves may be arrays or
+    ShapeDtypeStructs — only the structure is used); ``shardings`` (a
+    congruent NamedSharding tree) places leaves onto the *current* mesh,
+    re-resolved by the caller through the sharding rule tables —
+    restoring onto a different mesh shape is therefore free.
+
+    Raises ``CheckpointError`` when the on-disk keys disagree with
+    ``meta.json`` (truncated shard set) or with ``like`` (foreign
+    checkpoint), instead of a downstream ``KeyError``.
+    """
+    d = _step_dir(directory, step)
+    meta = read_meta(directory, step)
+    num_shards = int(meta.get("num_shards", 1))
+    data: Dict[str, np.ndarray] = {}
+    for i in range(num_shards):
+        path = os.path.join(d, _shard_name(i, num_shards))
+        if not os.path.exists(path) and num_shards == 1:
+            path = os.path.join(d, "arrays.npz")  # pre-shard layout
+        with np.load(path) as npz:  # context manager: handle closed
+            for k in npz.files:
+                data[k] = npz[k]
+    expected = set(meta["keys"])
+    got = set(data)
+    if got != expected:
+        raise CheckpointError(
+            f"checkpoint {d} is inconsistent with its meta.json: "
+            f"missing keys {sorted(expected - got)[:5]}, "
+            f"unexpected keys {sorted(got - expected)[:5]} "
+            f"(truncated or foreign checkpoint)"
+        )
     flat, treedef = jax.tree.flatten_with_path(like)
+    want = {_leaf_key(path) for path, _ in flat}
+    if want != expected:
+        raise CheckpointError(
+            f"checkpoint {d} does not match the restore target: "
+            f"checkpoint-only keys {sorted(expected - want)[:5]}, "
+            f"target-only keys {sorted(want - expected)[:5]}"
+        )
     shard_leaves = (
         jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat)
     )
     out = []
-    for (path, leaf), sh in zip(flat, shard_leaves):
-        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        arr = data[key]
+    for (path, _), sh in zip(flat, shard_leaves):
+        arr = data[_leaf_key(path)]
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:
             out.append(jax.numpy.asarray(arr))
     return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------ async checkpointer
+class AsyncCheckpointer:
+    """Background-thread checkpointer with the commit barrier and
+    keep-last-k retention.
+
+    ``save(step, state)`` snapshots the state to host numpy on the
+    *caller* thread (a consistent cut — np.asarray blocks until the
+    computation producing each leaf is done), then hands the file I/O to
+    a daemon worker: npz writes, the meta.json commit, and retention GC
+    all happen off the training loop.  ``wait()`` drains the queue;
+    worker failures surface on the next ``save``/``wait``.
+    """
+
+    def __init__(self, directory: str, *, keep_last_k: Optional[int] = 3,
+                 shard_index: int = 0, num_shards: int = 1,
+                 mesh_axes: Optional[Dict[str, int]] = None):
+        self.directory = directory
+        self.keep_last_k = keep_last_k
+        self.shard_index = int(shard_index)
+        self.num_shards = int(num_shards)
+        self.mesh_axes = dict(mesh_axes) if mesh_axes else None
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._inflight: set = set()
+        self._lock = threading.Lock()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, name="async-checkpointer", daemon=True
+        )
+        self._thread.start()
+
+    # --------------------------------------------------------- worker
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, arrays, extra = item
+                try:
+                    d = _step_dir(self.directory, step)
+                    os.makedirs(d, exist_ok=True)
+                    keys = sorted(arrays)
+                    mine = set(shard_keys(keys, self.shard_index, self.num_shards))
+                    _write_shard(d, {k: arrays[k] for k in keys if k in mine},
+                                 self.shard_index, self.num_shards)
+                    if _all_shards_landed(d, self.num_shards):
+                        meta = {"step": int(step), "keys": keys,
+                                "num_shards": self.num_shards,
+                                **({"mesh_axes": self.mesh_axes}
+                                   if self.mesh_axes else {}),
+                                **(extra or {})}
+                        _commit(d, meta)
+                    with self._lock:
+                        self._inflight.discard(step)
+                        protect = tuple(self._inflight)
+                    garbage_collect(self.directory, self.keep_last_k,
+                                    protect=protect)
+                except BaseException as e:  # noqa: BLE001 — surfaced to caller
+                    with self._lock:
+                        self._inflight.discard(step)
+                        self._error = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise CheckpointError("async checkpoint save failed") from err
+
+    # ---------------------------------------------------------- API
+    def save(self, step: int, state: PyTree,
+             extra: Optional[Dict] = None) -> None:
+        """Snapshot now, write in the background."""
+        self._raise_pending()
+        arrays = _flatten(state)  # device -> host copy on the caller
+        with self._lock:
+            self._inflight.add(int(step))
+        self._q.put((int(step), arrays, dict(extra) if extra else None))
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Block until every queued save has committed (or failed)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                idle = not self._inflight
+            if idle and self._q.unfinished_tasks == 0:
+                break
+            if deadline is not None and time.monotonic() > deadline:
+                raise TimeoutError("async checkpoint save did not finish")
+            time.sleep(0.005)
+        self._raise_pending()
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10.0)

@@ -19,7 +19,7 @@ Mechanisms without one ("none", "sigm") keep the central
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -125,3 +125,42 @@ class FederatedAveraging:
         update = jax.tree.unflatten(treedef, out)
         new_params = jax.tree.map(lambda p, u: p - cfg.lr * u, params, update)
         return new_params, {"cohort": n, "bits_per_coord": bits}
+
+    def run(self, params: PyTree, n_rounds: int, *,
+            checkpoint_dir: Optional[str] = None, checkpoint_every: int = 1,
+            keep_last_k: Optional[int] = 3,
+            resume: bool = False) -> Tuple[PyTree, Dict]:
+        """Drive ``n_rounds`` rounds with optional checkpoint-and-resume.
+
+        Rounds are pure functions of ``(seed, rnd, params)``, so a run
+        resumed from the round-``k`` checkpoint reproduces rounds
+        ``k..n`` of the uninterrupted run bitwise — kill-and-resume
+        determinism, pinned by tests/test_chaos.py.  Checkpoints go
+        through the async sharded checkpointer (commit barrier +
+        keep-last-k retention)."""
+        from repro.checkpoint import checkpoint as ckpt_mod
+
+        start = 0
+        if resume and checkpoint_dir:
+            last = ckpt_mod.latest_step(checkpoint_dir)
+            if last is not None:
+                state = ckpt_mod.restore(
+                    checkpoint_dir, last,
+                    {"params": params, "round": np.int64(0)})
+                params, start = state["params"], int(state["round"])
+        ckpt = None
+        if checkpoint_dir:
+            ckpt = ckpt_mod.AsyncCheckpointer(checkpoint_dir,
+                                              keep_last_k=keep_last_k)
+        info: Dict = {}
+        try:
+            for rnd in range(start, n_rounds):
+                params, info = self.round(params, rnd)
+                if ckpt is not None and (rnd + 1) % max(checkpoint_every, 1) == 0:
+                    ckpt.save(rnd + 1,
+                              {"params": params, "round": np.int64(rnd + 1)})
+        finally:
+            if ckpt is not None:
+                ckpt.close()
+        info["start_round"] = start
+        return params, info

@@ -48,6 +48,8 @@ def run_async(args) -> None:
         RuntimeConfig,
     )
 
+    from repro.runtime import chaos as chaos_mod
+
     if args.mechanism == "none":
         raise SystemExit(
             "--runtime async needs a mechanism with an integer wire "
@@ -55,6 +57,12 @@ def run_async(args) -> None:
         )
     seq = args.seq or (32 if args.smoke else 4096)
     batch = args.batch or (2 if args.smoke else 256)
+    plan = None
+    if args.chaos:
+        plan = chaos_mod.parse_plan(args.chaos, seed=0,
+                                    delay_s=args.chaos_delay,
+                                    rejoin_after_s=args.chaos_rejoin)
+        print(f"[train] chaos plan: {plan}")
     fl = FLConfig(
         n_clients=args.clients, mechanism=args.mechanism, sigma=args.sigma,
         clip=args.clip, cohort_fraction=args.cohort_fraction, lr=args.lr,
@@ -69,6 +77,11 @@ def run_async(args) -> None:
         straggler_fraction=args.straggler_fraction,
         straggler_delay_s=args.straggler_delay,
         compilation_cache_dir=args.compilation_cache,
+        heartbeat_timeout_s=args.heartbeat_timeout,
+        chaos=plan,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
     )
     wl = ModelGradWorkload(arch=args.arch, smoke=args.smoke, seq=seq,
                            batch=batch, data=args.data)
@@ -84,9 +97,24 @@ def run_async(args) -> None:
           f"({summary['rounds_per_sec']:.2f} rounds/s), occupancy "
           f"{summary['mean_cohort_occupancy']:.2f}, "
           f"{summary['bits_per_round']:.0f} bits/round, |dparams| {drift:.3g}")
+    print(f"[train] membership: {summary.get('active_members_final')} final "
+          f"members, {summary.get('evictions', 0)} evictions, "
+          f"{summary.get('joins', 0)} joins, "
+          f"{summary.get('degraded_rounds', 0)} degraded rounds, "
+          f"{summary.get('learner_restarts', 0)} learner restarts")
     if summary.get("empty_rounds"):
         raise SystemExit(f"{summary['empty_rounds']} empty rounds — no "
                          f"client updates landed; transport broken?")
+    if plan is not None and plan.any_faults:
+        # chaos acceptance: the failure must be visible in the realized
+        # cohort accounting — a run that claims full occupancy while a
+        # client was crashed would mean the metrics lie
+        if not (summary.get("degraded_rounds", 0)
+                or summary.get("evictions", 0)
+                or summary.get("learner_restarts", 0)):
+            raise SystemExit("chaos plan injected faults but the realized-"
+                             "cohort metrics show no degradation — fault "
+                             "injection broken?")
     if args.bench_out:
         with open(args.bench_out, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
@@ -118,8 +146,19 @@ def main():
     ap.add_argument("--msg-bits", type=int, default=None,
                     help="packed field width (2..24); default: widest for "
                          "the msg dtype")
-    ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--checkpoint-dir", "--ckpt", dest="checkpoint_dir",
+                    default=None,
+                    help="async sharded checkpoint directory (commit "
+                         "barrier + keep-last-k retention)")
+    ap.add_argument("--checkpoint-every", "--ckpt-every",
+                    dest="checkpoint_every", type=int, default=50,
+                    help="steps (sync) / rounds (async) between checkpoints")
+    ap.add_argument("--keep-last-k", type=int, default=3,
+                    help="checkpoints retained by GC (newest never deleted)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest committed checkpoint in "
+                         "--checkpoint-dir (elastic: the target mesh may "
+                         "differ from the mesh the checkpoint was saved on)")
     ap.add_argument("--data", default="lm", choices=["lm", "uniform"])
     # --- async actor/learner runtime (repro.runtime) ---
     ap.add_argument("--runtime", default="sync", choices=["sync", "async"])
@@ -141,6 +180,18 @@ def main():
                     help="wall-clock straggler probability per (client, "
                          "round) in async mode")
     ap.add_argument("--straggler-delay", type=float, default=0.5)
+    ap.add_argument("--heartbeat-timeout", type=float, default=10.0,
+                    help="async: members silent this long are evicted "
+                         "from future cohorts (clients beacon at 1/4)")
+    ap.add_argument("--chaos", default=None,
+                    help="async fault plan, e.g. 'client_crash@1:2,"
+                         "learner_crash@3' or 'crash_rate=0.2' "
+                         "(see repro.runtime.chaos.parse_plan)")
+    ap.add_argument("--chaos-delay", type=float, default=0.25,
+                    help="hold time for delay/slow_uplink faults")
+    ap.add_argument("--chaos-rejoin", type=float, default=None,
+                    help="crashed clients rejoin after this many seconds "
+                         "(default: crashes are permanent)")
     ap.add_argument("--bench-out", default=None,
                     help="write the async run summary as JSON here")
     args = ap.parse_args()
@@ -167,12 +218,24 @@ def main():
     tc = steps.TrainConfig(optimizer="adamw", lr=args.lr,
                            grad_accum=args.grad_accum, compression=comp)
     state = steps.init_train_state(cfg, tc, jax.random.PRNGKey(0))
-    if args.ckpt:
-        last = checkpoint.latest_step(args.ckpt)
+    if args.checkpoint_dir and (args.resume
+                                or checkpoint.latest_step(args.checkpoint_dir)
+                                is not None):
+        last = checkpoint.latest_step(args.checkpoint_dir)
         if last is not None:
-            print(f"[train] resuming from step {last}")
-            shardings = steps.train_state_shardings(cfg, tc, mesh)
-            state = checkpoint.restore(args.ckpt, last, state, shardings)
+            # elastic restore: leaf placement re-resolved through the
+            # sharding rule tables for THIS mesh (the checkpoint may have
+            # been written on a different pod count)
+            state, last = steps.restore_train_state(
+                args.checkpoint_dir, cfg, tc, mesh)
+            print(f"[train] resumed step {last} onto mesh "
+                  f"{dict(mesh.shape)}")
+
+    ckpt = None
+    if args.checkpoint_dir:
+        ckpt = checkpoint.AsyncCheckpointer(
+            args.checkpoint_dir, keep_last_k=args.keep_last_k,
+            mesh_axes=dict(mesh.shape))
 
     step_fn = jax.jit(steps.build_train_step(cfg, tc, mesh))
     dc = synthetic.DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
@@ -188,9 +251,11 @@ def main():
             dt = time.time() - t0
             print(f"[train] step {i:6d} loss {float(m['loss']):.4f} "
                   f"({(i - first + 1) * batch * seq / max(dt, 1e-9):,.0f} tok/s)")
-        if args.ckpt and (i + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt, i + 1, state)
-            print(f"[train] checkpointed step {i + 1}")
+        if ckpt is not None and (i + 1) % args.checkpoint_every == 0:
+            ckpt.save(i + 1, state)
+            print(f"[train] checkpoint {i + 1} queued (async)")
+    if ckpt is not None:
+        ckpt.close()
     print("[train] done")
 
 

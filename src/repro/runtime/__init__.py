@@ -7,9 +7,25 @@ Import order matters: ``protocol`` is imported by ``repro.fl.federated``
 keeps the cycle one-directional at package-init time.
 """
 from repro.runtime import protocol  # noqa: F401  (must precede actors)
-from repro.runtime.buffer import BufferStats, RoundBuffer  # noqa: F401
+from repro.runtime.buffer import (  # noqa: F401
+    BufferStats,
+    RoundBuffer,
+    combine_weights,
+)
+from repro.runtime.chaos import (  # noqa: F401
+    Fault,
+    FaultPlan,
+    LearnerKilled,
+    parse_plan,
+)
 from repro.runtime.messages import SHUTDOWN  # noqa: F401
-from repro.runtime.messages import ClientUpdate, RoundAnnounce  # noqa: F401
+from repro.runtime.messages import (  # noqa: F401
+    ClientUpdate,
+    Heartbeat,
+    JoinAck,
+    JoinRequest,
+    RoundAnnounce,
+)
 from repro.runtime.monitor import Monitor, RoundRecord  # noqa: F401
 from repro.runtime.protocol import RoundProtocol  # noqa: F401
 from repro.runtime.transport import (  # noqa: F401
@@ -37,9 +53,17 @@ __all__ = [
     "RoundProtocol",
     "RoundAnnounce",
     "ClientUpdate",
+    "Heartbeat",
+    "JoinRequest",
+    "JoinAck",
     "SHUTDOWN",
     "RoundBuffer",
     "BufferStats",
+    "combine_weights",
+    "Fault",
+    "FaultPlan",
+    "LearnerKilled",
+    "parse_plan",
     "Monitor",
     "RoundRecord",
     "TransportError",

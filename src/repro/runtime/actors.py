@@ -1,4 +1,4 @@
-"""Client actor and staleness-aware learner.
+"""Client actor and staleness-aware, membership-aware learner.
 
 Client actor (`run_client` — thread target or multiprocessing entry
 point): waits for a round announce, computes its local update on the
@@ -7,21 +7,30 @@ protocol, and sends it with bounded retry/backoff.  Wall-clock
 stragglers are simulated deterministically per (seed, client, round):
 a straggling client sleeps past the learner's round deadline, so its
 update arrives *late* and exercises the staleness path for real.
+When a heartbeat interval is configured the actor beacons liveness
+between rounds; a chaos `FaultPlan` can crash it at a pinned round
+(optionally rejoining later via a JoinRequest) or hold its uplink.
 
 Learner: per server round, announces the cohort (sampled with the same
-`fl.federated.sample_cohort` logic as the synchronous loop), polls the
-transport until quorum or timeout, buffers everything through the
-staleness-aware `RoundBuffer`, then aggregates the drained groups —
-each origin round decoded with ITS OWN round key and realized subset
-(homomorphic decode only combines messages that share a round's
-randomness), then combined across rounds with staleness weights.
+`fl.federated.sample_cohort` logic as the synchronous loop, then
+filtered to the *live membership* — clients whose heartbeats expired
+are evicted and leave future cohorts), polls the transport until quorum
+or timeout, buffers everything through the staleness-aware
+`RoundBuffer`, then aggregates the drained groups — each origin round
+decoded with ITS OWN round key and realized subset (homomorphic decode
+only combines messages that share a round's randomness), then combined
+across rounds with staleness weights renormalized over the surviving
+realized cohort (`buffer.combine_weights`).  With a checkpointer
+attached, the learner saves `{params, round}` on a cadence so an
+injected (or real) learner crash resumes from the last committed round
+instead of round zero.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -31,8 +40,15 @@ import numpy as np
 # still mid-import — attributes are resolved at call time, never here.
 import repro.fl.federated as federated
 from repro.runtime import protocol
-from repro.runtime.buffer import RoundBuffer
-from repro.runtime.messages import ClientUpdate, RoundAnnounce
+from repro.runtime.buffer import RoundBuffer, combine_weights, staleness_weight
+from repro.runtime.chaos import FaultPlan, LearnerKilled
+from repro.runtime.messages import (
+    ClientUpdate,
+    Heartbeat,
+    JoinAck,
+    JoinRequest,
+    RoundAnnounce,
+)
 from repro.runtime.monitor import Monitor, RoundRecord
 from repro.runtime.transport import ClientEndpoint, TransportError
 
@@ -53,6 +69,9 @@ class ClientSpec:
     straggler_fraction: float = 0.0
     straggler_delay_s: float = 0.5
     idle_timeout_s: float = 0.2
+    heartbeat_interval_s: Optional[float] = None  # None = no beacons
+    join_on_start: bool = False  # announce ourselves before the first round
+    chaos: Optional[FaultPlan] = None
     compilation_cache_dir: Optional[str] = None  # persistent jax
     #   compilation cache for spawned workers (see _setup_compilation_cache)
 
@@ -84,18 +103,46 @@ def _setup_compilation_cache(cache_dir: str) -> None:
         pass
 
 
+def _safe_send(endpoint: ClientEndpoint, msg) -> None:
+    """Control-plane sends (heartbeat / join) are best-effort: a lost
+    beacon costs at worst an eviction-and-rejoin, never the actor."""
+    try:
+        endpoint.send(msg)
+    except (TransportError, OSError):
+        pass
+
+
 def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
     if spec.compilation_cache_dir:
         _setup_compilation_cache(spec.compilation_cache_dir)
     grad = spec.workload.build()
+    chaos = spec.chaos
+    if spec.join_on_start:
+        _safe_send(endpoint, JoinRequest(spec.client_id, time.time()))
+    last_beat = time.monotonic()
     while True:
+        if (spec.heartbeat_interval_s is not None
+                and time.monotonic() - last_beat >= spec.heartbeat_interval_s):
+            _safe_send(endpoint, Heartbeat(spec.client_id, time.time()))
+            last_beat = time.monotonic()
         ann = endpoint.recv_latest(timeout=spec.idle_timeout_s)
-        if ann is None:
-            continue
+        if ann is None or isinstance(ann, JoinAck):
+            continue  # JoinAck: admission confirmed; next announce has work
         if ann.shutdown:
             return
         if spec.client_id not in ann.cohort:
             continue
+        if chaos is not None:
+            fault = chaos.client_crash(spec.client_id, ann.rnd)
+            if fault is not None:
+                if fault.rejoin_after_s is None:
+                    return  # hard crash: the actor dies mid-round
+                # transient crash: silent through the round(s), then the
+                # elastic join path — announce ourselves and resume
+                time.sleep(fault.rejoin_after_s)
+                _safe_send(endpoint, JoinRequest(spec.client_id, time.time()))
+                last_beat = time.monotonic()
+                continue
         if _is_straggler(spec, ann.rnd):
             time.sleep(spec.straggler_delay_s)
         pos = ann.cohort.index(spec.client_id)
@@ -110,6 +157,10 @@ def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
             dither_seed=np.asarray(protocol.client_dither_key(key, n, pos)),
             sent_at=time.time(),
         )
+        if chaos is not None:
+            hold = chaos.slow_uplink(spec.client_id, ann.rnd)
+            if hold > 0.0:
+                time.sleep(hold)  # straggling uplink: the send itself is late
         for attempt in range(spec.max_retries + 1):
             try:
                 endpoint.send(dataclasses.replace(upd, attempt=attempt))
@@ -118,24 +169,21 @@ def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
                 if attempt == spec.max_retries:
                     break  # give up; the learner proceeds without us
                 time.sleep(spec.retry_backoff_s * (2.0 ** attempt))
-
-
-def staleness_weight(staleness: int, weighting: str) -> float:
-    if weighting == "uniform":
-        return 1.0
-    if weighting == "inverse":
-        return 1.0 / (1.0 + staleness)
-    raise KeyError(f"unknown staleness weighting {weighting!r}")
+        last_beat = time.monotonic()  # an update is itself a liveness proof
 
 
 class Learner:
-    """Server actor: drives rounds, owns the buffer and the params."""
+    """Server actor: drives rounds, owns the buffer, params, membership."""
 
     def __init__(self, fl: federated.FLConfig, proto: protocol.RoundProtocol,
                  endpoint, params0: np.ndarray, monitor: Monitor, *,
                  staleness_bound: int = 0, staleness_weighting: str = "uniform",
                  quorum: float = 1.0, round_timeout_s: float = 30.0,
-                 poll_interval_s: float = 0.002, buffer_capacity: int = 4096):
+                 poll_interval_s: float = 0.002, buffer_capacity: int = 4096,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 chaos: Optional[FaultPlan] = None,
+                 checkpointer=None, checkpoint_every: int = 1,
+                 fired_learner_crashes: Optional[Set[int]] = None):
         self.fl = fl
         self.proto = proto
         self.endpoint = endpoint
@@ -146,26 +194,90 @@ class Learner:
         self.round_timeout_s = round_timeout_s
         self.poll_interval_s = poll_interval_s
         self.buffer = RoundBuffer(staleness_bound, buffer_capacity)
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.chaos = chaos
+        self.checkpointer = checkpointer
+        self.checkpoint_every = max(int(checkpoint_every), 1)
+        # learner-crash faults fire once per round across restarts — the
+        # runtime threads this set through resumes, else a deterministic
+        # plan would re-kill the resumed learner at the same round forever
+        self.fired_learner_crashes = (
+            fired_learner_crashes if fired_learner_crashes is not None
+            else set()
+        )
+        # live membership: client -> last proof of life (monotonic)
+        now = time.monotonic()
+        self.members: Dict[int, float] = {i: now for i in range(fl.n_clients)}
+        self.evicted_total = 0
+        self.joined_total = 0
+        self._round_evicted = 0
+        self._round_joined = 0
+
+    # -------------------------------------------------------- membership
+    def _touch(self, cid: int) -> None:
+        if cid in self.members:
+            self.members[cid] = time.monotonic()
+
+    def _admit(self, cid: int, rnd: int) -> None:
+        """JoinRequest handling: (re-)admit and answer with the current
+        round + model so the joiner is round-current immediately."""
+        fresh = cid not in self.members
+        self.members[cid] = time.monotonic()
+        if fresh:
+            self.joined_total += 1
+            self._round_joined += 1
+        self.endpoint.send_to(cid, JoinAck(rnd=rnd, params=self.params))
+
+    def _evict_expired(self) -> None:
+        if self.heartbeat_timeout_s is None:
+            return
+        cutoff = time.monotonic() - self.heartbeat_timeout_s
+        dead = [cid for cid, ts in self.members.items() if ts < cutoff]
+        for cid in dead:
+            del self.members[cid]
+        self.evicted_total += len(dead)
+        self._round_evicted += len(dead)
+
+    def _handle(self, msg, rnd: int) -> None:
+        """Dispatch one polled uplink message."""
+        if isinstance(msg, ClientUpdate):
+            self._touch(msg.client_id)
+            self.buffer.offer(msg, server_round=rnd)
+        elif isinstance(msg, Heartbeat):
+            self._touch(msg.client_id)
+        elif isinstance(msg, JoinRequest):
+            self._admit(msg.client_id, rnd)
 
     # ------------------------------------------------------------ rounds
-    def _gather(self, rnd: int, need: int, deadline: float) -> None:
+    def _need(self, cohort: Tuple[int, ...]) -> int:
+        """Quorum over the SURVIVING cohort: members evicted mid-round
+        stop counting toward the deadline, so a round never stalls
+        waiting for a client the membership already declared dead."""
+        alive = sum(1 for c in cohort if c in self.members)
+        return max(1, math.ceil(self.quorum * max(alive, 1)))
+
+    def _gather(self, rnd: int, cohort: Tuple[int, ...],
+                deadline: float) -> None:
         while time.monotonic() < deadline:
-            if self.buffer.count(rnd) >= need:
+            self._evict_expired()
+            if self.buffer.count(rnd) >= self._need(cohort):
                 return
-            upd = self.endpoint.poll(
+            msg = self.endpoint.poll(
                 timeout=min(self.poll_interval_s,
                             max(deadline - time.monotonic(), 1e-4))
             )
-            if upd is not None:
-                self.buffer.offer(upd, server_round=rnd)
+            if msg is not None:
+                self._handle(msg, rnd)
 
     def _combine(self, rnd: int) -> Tuple[Optional[jnp.ndarray], Dict]:
         """Decode each drained origin-round group with its own key and
-        realized subset, then staleness-weight across groups."""
+        realized subset, then staleness-weight across groups with the
+        realized-cohort renormalization."""
         groups = self.buffer.drain(rnd)
         info: Dict = {"staleness_counts": {}, "used_total": 0,
                       "realized_current": 0, "bits_total": 0.0}
-        ys, ws = [], []
+        ys: Dict[int, jnp.ndarray] = {}
+        sizes: Dict[int, int] = {}
         for g, received in groups.items():
             cohort = self.buffer.cohort_of(g)
             n = len(cohort)
@@ -181,8 +293,8 @@ class Learner:
             y, bits = self.proto.decode(
                 protocol.round_key(self.fl.seed, g), n, msgs, mask, d=d)
             s = rnd - g
-            ys.append(y)
-            ws.append(staleness_weight(s, self.staleness_weighting))
+            ys[g] = y
+            sizes[g] = len(received)
             info["staleness_counts"][s] = len(received)
             info["used_total"] += len(received)
             info["bits_total"] += bits * d * len(received)
@@ -193,36 +305,56 @@ class Learner:
         if len(ys) == 1:
             # single group: no reweighting arithmetic — staleness 0 with
             # a full cohort must reproduce the synchronous round bitwise
-            return ys[0], info
-        wsum = float(sum(ws))
-        acc = ws[0] * ys[0]
-        for w, y in zip(ws[1:], ys[1:]):
-            acc = acc + w * y
-        return acc / wsum, info
+            return next(iter(ys.values())), info
+        ws = combine_weights(sizes, rnd, self.staleness_weighting)
+        acc = None
+        for g, y in ys.items():
+            term = ws[g] * y
+            acc = term if acc is None else acc + term
+        return acc, info
 
     def step(self, rnd: int) -> RoundRecord:
         fl = self.fl
         t0 = time.monotonic()
-        cohort = tuple(
-            int(c) for c in federated.sample_cohort(
-                fl.n_clients, fl.cohort_fraction, fl.straggler_fraction,
-                fl.seed, rnd)
-        )
+        self._round_evicted = 0
+        self._round_joined = 0
+        self._evict_expired()
+        sampled = federated.sample_cohort(
+            fl.n_clients, fl.cohort_fraction, fl.straggler_fraction,
+            fl.seed, rnd)
+        # elastic membership: evicted clients leave the announced cohort
+        # (at full membership this is exactly the synchronous cohort)
+        cohort = tuple(int(c) for c in sampled if int(c) in self.members)
+        if not cohort and self.members:
+            cohort = (min(self.members),)  # deterministic non-empty fallback
         key = protocol.round_key(fl.seed, rnd)
         self.buffer.register_round(
-            rnd, cohort, protocol.expected_dither_keys(key, len(cohort)))
+            rnd, cohort, protocol.expected_dither_keys(key, len(cohort))
+            if cohort else None)
         rej0 = self.buffer.stats.rejected_stale
         oth0 = (self.buffer.stats.rejected_unknown_round
                 + self.buffer.stats.rejected_bad_seed)
         self.endpoint.broadcast(RoundAnnounce(rnd, cohort, self.params))
-        need = max(1, math.ceil(self.quorum * len(cohort)))
-        self._gather(rnd, need, t0 + self.round_timeout_s)
+        if (self.chaos is not None and rnd not in self.fired_learner_crashes
+                and self.chaos.learner_crash(rnd)):
+            # mid-round kill: the announce is out, the step is not — a
+            # resumed learner re-announces this round from its checkpoint
+            self.fired_learner_crashes.add(rnd)
+            raise LearnerKilled(rnd)
+        if cohort:
+            self._gather(rnd, cohort, t0 + self.round_timeout_s)
         y, info = self._combine(rnd)
         norm = 0.0
         if y is not None:
             self.params = np.asarray(
                 jnp.asarray(self.params) - self.fl.lr * y, np.float32)
             norm = float(np.linalg.norm(np.asarray(y)))
+        if (self.checkpointer is not None
+                and (rnd + 1) % self.checkpoint_every == 0):
+            self.checkpointer.save(
+                rnd + 1,
+                {"params": self.params, "round": np.int64(rnd + 1)},
+            )
         rec = RoundRecord(
             rnd=rnd,
             latency_s=time.monotonic() - t0,
@@ -235,11 +367,14 @@ class Learner:
             rejected_other=(self.buffer.stats.rejected_unknown_round
                             + self.buffer.stats.rejected_bad_seed - oth0),
             update_norm=norm,
+            active_members=len(self.members),
+            evicted=self._round_evicted,
+            joined=self._round_joined,
         )
         self.monitor.emit(rec)
         return rec
 
-    def run(self, n_rounds: int) -> np.ndarray:
-        for rnd in range(n_rounds):
+    def run(self, n_rounds: int, start_round: int = 0) -> np.ndarray:
+        for rnd in range(start_round, n_rounds):
             self.step(rnd)
         return self.params

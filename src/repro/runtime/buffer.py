@@ -24,7 +24,35 @@ import numpy as np
 
 from repro.runtime.messages import ClientUpdate
 
-__all__ = ["RoundBuffer", "BufferStats"]
+__all__ = ["RoundBuffer", "BufferStats", "staleness_weight",
+           "combine_weights"]
+
+
+def staleness_weight(staleness: int, weighting: str) -> float:
+    if weighting == "uniform":
+        return 1.0
+    if weighting == "inverse":
+        return 1.0 / (1.0 + staleness)
+    raise KeyError(f"unknown staleness weighting {weighting!r}")
+
+
+def combine_weights(group_sizes: Dict[int, int], server_round: int,
+                    weighting: str) -> Dict[int, float]:
+    """Normalized combine weights over drained origin-round groups,
+    renormalized by the *surviving realized cohort*: each group's decoded
+    mean enters the combine with weight ∝ w(staleness) · r_g, where r_g
+    is the number of updates that actually landed for that origin round
+    — a group carried by one straggling survivor cannot outvote a full
+    current cohort, and evicted clients stop counting the moment they
+    stop reporting."""
+    raw = {
+        g: staleness_weight(server_round - g, weighting) * max(int(r), 0)
+        for g, r in group_sizes.items()
+    }
+    total = sum(raw.values())
+    if total <= 0.0:
+        return {g: 0.0 for g in raw}
+    return {g: w / total for g, w in raw.items()}
 
 
 @dataclasses.dataclass

@@ -21,7 +21,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["RoundAnnounce", "ClientUpdate", "SHUTDOWN"]
+__all__ = ["RoundAnnounce", "ClientUpdate", "Heartbeat", "JoinRequest",
+           "JoinAck", "SHUTDOWN"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,3 +64,36 @@ class ClientUpdate:
 
     def staleness(self, server_round: int) -> int:
         return server_round - self.origin_round
+
+
+@dataclasses.dataclass(frozen=True)
+class Heartbeat:
+    """Client -> learner: liveness beacon.  The learner evicts members
+    whose last heartbeat (or update) is older than the configured
+    timeout; evicted clients leave future announced cohorts, so the
+    realized-cohort renormalization reflects true membership."""
+
+    client_id: int
+    sent_at: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinRequest:
+    """Client -> learner: (re)join the membership — sent by a fresh
+    client at startup after a crash, or by a crashed-and-recovered actor
+    (chaos ``rejoin_after_s``).  The learner re-admits the client and
+    answers with a JoinAck."""
+
+    client_id: int
+    sent_at: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinAck:
+    """Learner -> one client: admission.  Carries the current round (the
+    joiner derives the round key locally from it, like everyone else)
+    and the current model, so a joiner is round-current immediately
+    instead of waiting out a full announce cycle."""
+
+    rnd: int
+    params: Optional[np.ndarray]

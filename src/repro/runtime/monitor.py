@@ -17,7 +17,25 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["RoundRecord", "Monitor"]
+__all__ = ["RoundRecord", "Monitor", "_mean_recovery"]
+
+
+def _mean_recovery(recs) -> float:
+    """Mean length (in rounds) of consecutive degraded stretches — rounds
+    where the realized current cohort fell short of the announced one.
+    After a fault this is the time to recover full occupancy (via client
+    rejoin or membership eviction shrinking the announced cohort); 0.0
+    means no round was ever degraded."""
+    runs, cur = [], 0
+    for r in sorted(recs, key=lambda r: r.rnd):
+        if r.announced and r.realized_current < r.announced:
+            cur += 1
+        elif cur:
+            runs.append(cur)
+            cur = 0
+    if cur:
+        runs.append(cur)
+    return float(np.mean(runs)) if runs else 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +50,10 @@ class RoundRecord:
     rejected_stale: int
     rejected_other: int
     update_norm: float
+    # elastic membership (heartbeat/eviction/join protocol)
+    active_members: int = 0  # membership size after this round's evictions
+    evicted: int = 0         # members evicted during this round
+    joined: int = 0          # members (re-)admitted during this round
 
 
 class Monitor:
@@ -94,6 +116,14 @@ class Monitor:
             "rejected_stale": sum(r.rejected_stale for r in recs),
             "rejected_other": sum(r.rejected_other for r in recs),
             "empty_rounds": sum(1 for r in recs if r.used_total == 0),
+            # elastic membership / fault recovery
+            "evictions": sum(r.evicted for r in recs),
+            "joins": sum(r.joined for r in recs),
+            "active_members_final": recs[-1].active_members,
+            "degraded_rounds": sum(
+                1 for r in recs if r.realized_current < r.announced
+            ),
+            "recovery_rounds_mean": _mean_recovery(recs),
         }
         if self.bits_per_coord_analytic is not None:
             out["bits_per_coord_analytic"] = self.bits_per_coord_analytic

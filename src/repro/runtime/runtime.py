@@ -22,8 +22,10 @@ import numpy as np
 
 # Module-style import (cycle with repro.fl.federated, see actors.py)
 import repro.fl.federated as federated
+from repro.checkpoint import checkpoint as ckpt_mod
 from repro.runtime import protocol
 from repro.runtime.actors import ClientSpec, Learner, run_client
+from repro.runtime.chaos import FaultPlan, LearnerKilled
 from repro.runtime.messages import SHUTDOWN
 from repro.runtime.monitor import Monitor, RoundRecord
 from repro.runtime.transport import make_transport
@@ -79,6 +81,17 @@ class RuntimeConfig:
     # process transport (threads share the parent's in-memory jit cache
     # already and get nothing from it)
     compilation_cache_dir: Optional[str] = None
+    # elastic membership: a member whose last heartbeat/update is older
+    # than this is evicted (leaves future announced cohorts); clients
+    # beacon at timeout/4.  None disables the protocol entirely.
+    heartbeat_timeout_s: Optional[float] = 10.0
+    # fault tolerance
+    chaos: Optional[FaultPlan] = None  # deterministic fault injection
+    checkpoint_dir: Optional[str] = None  # learner {params, round} ckpts
+    checkpoint_every: int = 1
+    keep_last_k: Optional[int] = 3
+    resume: bool = False  # start from the latest committed checkpoint
+    max_learner_restarts: int = 8  # bound on crash-recovery loops
 
 
 class AsyncFederatedRuntime:
@@ -100,12 +113,42 @@ class AsyncFederatedRuntime:
             per_coord=bool(kw.get("per_coord", True)),
         )
 
+    def _restore(self, params0: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Latest committed learner checkpoint, or the initial state."""
+        d = self.cfg.checkpoint_dir
+        last = ckpt_mod.latest_step(d) if d else None
+        if last is None:
+            return np.asarray(params0, np.float32), 0
+        state = ckpt_mod.restore(
+            d, last,
+            {"params": np.asarray(params0, np.float32),
+             "round": np.int64(0)},
+        )
+        return np.asarray(state["params"], np.float32), int(state["round"])
+
+    def _make_learner(self, params: np.ndarray, monitor: Monitor,
+                      endpoint, checkpointer, fired) -> Learner:
+        cfg = self.cfg
+        return Learner(
+            cfg.fl, self.proto, endpoint, params, monitor,
+            staleness_bound=cfg.staleness_bound,
+            staleness_weighting=cfg.staleness_weighting,
+            quorum=cfg.quorum, round_timeout_s=cfg.round_timeout_s,
+            poll_interval_s=cfg.poll_interval_s,
+            buffer_capacity=cfg.buffer_capacity,
+            heartbeat_timeout_s=cfg.heartbeat_timeout_s,
+            chaos=cfg.chaos, checkpointer=checkpointer,
+            checkpoint_every=cfg.checkpoint_every,
+            fired_learner_crashes=fired,
+        )
+
     def run(self, params0: np.ndarray, n_rounds: int
             ) -> Tuple[np.ndarray, dict, List[RoundRecord]]:
         cfg = self.cfg
         fl = cfg.fl
         transport = make_transport(cfg.transport, fl.n_clients,
-                                   cfg.drop_prob, drop_seed=fl.seed)
+                                   cfg.drop_prob, drop_seed=fl.seed,
+                                   chaos=cfg.chaos)
         monitor = Monitor(
             bits_per_coord_analytic=analytic_bits_per_coord(
                 fl.mechanism, fl.n_clients, fl.sigma, fl.clip)
@@ -114,6 +157,8 @@ class AsyncFederatedRuntime:
         if cache_dir is None and cfg.transport == "process":
             cache_dir = os.path.join(tempfile.gettempdir(),
                                      "repro-jax-cache")
+        heartbeat_interval = (None if cfg.heartbeat_timeout_s is None
+                              else cfg.heartbeat_timeout_s / 4.0)
         specs = [
             ClientSpec(
                 client_id=i, seed=fl.seed, proto=self.proto,
@@ -121,25 +166,48 @@ class AsyncFederatedRuntime:
                 retry_backoff_s=cfg.retry_backoff_s,
                 straggler_fraction=cfg.straggler_fraction,
                 straggler_delay_s=cfg.straggler_delay_s,
+                heartbeat_interval_s=heartbeat_interval,
+                chaos=cfg.chaos,
                 compilation_cache_dir=cache_dir,
             )
             for i in range(fl.n_clients)
         ]
         transport.start_clients(run_client, specs)
-        learner = Learner(
-            fl, self.proto, transport.learner_endpoint(),
-            np.asarray(params0, np.float32), monitor,
-            staleness_bound=cfg.staleness_bound,
-            staleness_weighting=cfg.staleness_weighting,
-            quorum=cfg.quorum, round_timeout_s=cfg.round_timeout_s,
-            poll_interval_s=cfg.poll_interval_s,
-            buffer_capacity=cfg.buffer_capacity,
-        )
+        checkpointer = None
+        if cfg.checkpoint_dir:
+            checkpointer = ckpt_mod.AsyncCheckpointer(
+                cfg.checkpoint_dir, keep_last_k=cfg.keep_last_k)
+        params = np.asarray(params0, np.float32)
+        start_round = 0
+        if cfg.resume and cfg.checkpoint_dir:
+            params, start_round = self._restore(params0)
+        fired: set = set()
+        restarts = 0
+        endpoint = transport.learner_endpoint()
         try:
-            params = learner.run(n_rounds)
+            while True:
+                learner = self._make_learner(params, monitor, endpoint,
+                                             checkpointer, fired)
+                try:
+                    params = learner.run(n_rounds, start_round=start_round)
+                    break
+                except LearnerKilled:
+                    # the learner process "died" mid-round: recover from
+                    # the last committed checkpoint (losing at most
+                    # checkpoint_every - 1 rounds of progress), with a
+                    # fresh buffer — exactly a real restart
+                    restarts += 1
+                    if restarts > cfg.max_learner_restarts:
+                        raise
+                    if checkpointer is not None:
+                        checkpointer.wait()
+                    params, start_round = self._restore(params0)
         finally:
-            learner.endpoint.broadcast(SHUTDOWN)
+            endpoint.broadcast(SHUTDOWN)
             transport.shutdown()
+            if checkpointer is not None:
+                checkpointer.close()
         summary = monitor.summary()
         monitor.close()
+        summary["learner_restarts"] = restarts
         return params, summary, list(monitor.records)

@@ -24,6 +24,7 @@ from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.runtime.chaos import FaultPlan
 from repro.runtime.messages import ClientUpdate, RoundAnnounce
 
 __all__ = [
@@ -47,13 +48,14 @@ class ClientEndpoint:
     to the child through Process args — queue inheritance)."""
 
     def __init__(self, client_id: int, down, up, drop_prob: float = 0.0,
-                 drop_seed: int = 0):
+                 drop_seed: int = 0, chaos: Optional[FaultPlan] = None):
         self.client_id = client_id
         self._down = down
         self._up = up
         self._drop_prob = float(drop_prob)
         self._drop_seed = int(drop_seed)
         self._drop_rng = None  # built lazily so the endpoint pickles
+        self._chaos = chaos
 
     def recv_latest(self, timeout: float) -> Optional[RoundAnnounce]:
         """Newest pending announce (drains the queue — a slow client
@@ -68,8 +70,8 @@ class ClientEndpoint:
             except queue.Empty:
                 return msg
 
-    def send(self, update: ClientUpdate) -> None:
-        if self._drop_prob > 0.0:
+    def send(self, update) -> None:
+        if self._drop_prob > 0.0 and isinstance(update, ClientUpdate):
             if self._drop_rng is None:
                 self._drop_rng = np.random.default_rng(
                     (self._drop_seed, self.client_id)
@@ -79,6 +81,21 @@ class ClientEndpoint:
                     f"injected loss (client {self.client_id}, "
                     f"attempt {update.attempt})"
                 )
+        if self._chaos is not None and isinstance(update, ClientUpdate):
+            fault = self._chaos.transport_fault(self.client_id,
+                                                update.origin_round)
+            if fault is not None:
+                if fault.kind == "drop":
+                    return  # vanished in flight: no error, so no retry
+                if fault.kind == "delay":
+                    # held in flight; the client thread is NOT blocked
+                    t = threading.Timer(fault.delay_s, self._up.put,
+                                        args=(update,))
+                    t.daemon = True
+                    t.start()
+                    return
+                if fault.kind == "duplicate":
+                    self._up.put(update)  # replayed once more below
         self._up.put(update)
 
 
@@ -97,6 +114,10 @@ class LearnerEndpoint:
         for q in self._downs:
             q.put(announce)
 
+    def send_to(self, client_id: int, msg) -> None:
+        """Direct downlink to one client (JoinAck on re-admission)."""
+        self._downs[client_id].put(msg)
+
     def poll(self, timeout: float) -> Optional[ClientUpdate]:
         try:
             return self._up.get(timeout=max(timeout, 1e-4))
@@ -105,22 +126,25 @@ class LearnerEndpoint:
 
 
 class _BaseTransport:
+    chaos: Optional[FaultPlan] = None
+
     def learner_endpoint(self) -> LearnerEndpoint:
         return LearnerEndpoint(self._downs, self._up)
 
     def client_endpoint(self, i: int) -> ClientEndpoint:
         return ClientEndpoint(i, self._downs[i], self._up,
-                              self.drop_prob, self.drop_seed)
+                              self.drop_prob, self.drop_seed, self.chaos)
 
 
 class ThreadTransport(_BaseTransport):
     kind = "thread"
 
     def __init__(self, n_clients: int, drop_prob: float = 0.0,
-                 drop_seed: int = 0):
+                 drop_seed: int = 0, chaos: Optional[FaultPlan] = None):
         self.n_clients = n_clients
         self.drop_prob = drop_prob
         self.drop_seed = drop_seed
+        self.chaos = chaos
         self._downs = [queue.Queue() for _ in range(n_clients)]
         self._up: "queue.Queue" = queue.Queue()
         self._threads: List[threading.Thread] = []
@@ -144,10 +168,11 @@ class ProcessTransport(_BaseTransport):
     kind = "process"
 
     def __init__(self, n_clients: int, drop_prob: float = 0.0,
-                 drop_seed: int = 0):
+                 drop_seed: int = 0, chaos: Optional[FaultPlan] = None):
         self.n_clients = n_clients
         self.drop_prob = drop_prob
         self.drop_seed = drop_seed
+        self.chaos = chaos
         # spawn (not fork): children must not inherit an initialized jax
         self._ctx = multiprocessing.get_context("spawn")
         self._downs = [self._ctx.Queue() for _ in range(n_clients)]
@@ -171,12 +196,17 @@ class ProcessTransport(_BaseTransport):
                 p.terminate()
                 p.join(timeout=5.0)
         self._procs = []
+        # a crashed/evicted client leaves its down queue with unread
+        # announces; without this the queue's feeder thread blocks
+        # interpreter exit flushing into a pipe nobody will ever read
+        for q in (*self._downs, self._up):
+            q.cancel_join_thread()
 
 
 def make_transport(kind: str, n_clients: int, drop_prob: float = 0.0,
-                   drop_seed: int = 0):
+                   drop_seed: int = 0, chaos: Optional[FaultPlan] = None):
     if kind == "thread":
-        return ThreadTransport(n_clients, drop_prob, drop_seed)
+        return ThreadTransport(n_clients, drop_prob, drop_seed, chaos)
     if kind == "process":
-        return ProcessTransport(n_clients, drop_prob, drop_seed)
+        return ProcessTransport(n_clients, drop_prob, drop_seed, chaos)
     raise KeyError(f"unknown transport {kind!r}; have thread|process")

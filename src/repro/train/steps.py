@@ -110,6 +110,26 @@ def init_train_state(cfg: ModelConfig, tc: TrainConfig, key):
             "step": jnp.zeros((), jnp.int32)}
 
 
+def restore_train_state(directory: str, cfg: ModelConfig, tc: TrainConfig,
+                        mesh: Mesh, step: Optional[int] = None):
+    """Elastic restore of a train state onto ``mesh``: leaf placement is
+    re-resolved through the `dist.sharding` rule tables for the *target*
+    mesh — the rule tables, not the checkpoint, decide placement, so a
+    checkpoint written on a ``(pod=4, data, model)`` mesh restores onto
+    ``(pod=2, ...)`` or ``(pod=8, ...)`` unchanged.  Returns
+    ``(state, step)``; raises if no committed checkpoint exists."""
+    from repro.checkpoint import checkpoint
+
+    if step is None:
+        step = checkpoint.latest_step(directory)
+        if step is None:
+            raise checkpoint.CheckpointError(
+                f"no committed checkpoint under {directory}")
+    abs_state = make_train_state_specs(cfg, tc)
+    shardings = train_state_shardings(cfg, tc, mesh)
+    return checkpoint.restore(directory, step, abs_state, shardings), step
+
+
 def _split_microbatches(batch: Dict, accum: int) -> Dict:
     return {k: v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
             for k, v in batch.items()}

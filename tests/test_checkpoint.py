@@ -1,0 +1,210 @@
+"""Crash-safety and elastic-restore invariants of the checkpointer.
+
+Pinned properties:
+  * a kill between the npz write and the meta.json commit leaves
+    ``latest_step`` at the previous committed checkpoint;
+  * the multi-shard commit barrier: meta.json appears only after EVERY
+    shard's landed marker is present;
+  * retention GC reaps provably-stale partials and old committed steps
+    but never the newest committed one;
+  * restore validates on-disk keys against meta.json and the restore
+    target, closing the npz handle either way;
+  * save -> restore round-trips bitwise across mesh shapes (pods 4->2
+    and 2->4) with placement re-resolved through the sharding rules.
+"""
+import gc
+import os
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import checkpoint
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    CheckpointError,
+    shard_keys,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.train import steps
+
+
+def _state(seed=0, d=8):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": rng.normal(size=(d, d)).astype(np.float32),
+                   "b": rng.normal(size=d).astype(np.float32)},
+        "step": np.int64(seed),
+    }
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ basic API
+def test_save_restore_roundtrip_bitwise(tmp_path):
+    d = str(tmp_path)
+    state = _state(1)
+    checkpoint.save(d, 3, state, extra={"note": "x"})
+    assert checkpoint.all_steps(d) == [3]
+    assert checkpoint.read_meta(d, 3)["note"] == "x"
+    with warnings.catch_warnings():
+        # satellite: restore must close the npz handle (context manager)
+        warnings.simplefilter("error", ResourceWarning)
+        restored = checkpoint.restore(d, 3, _state(99))
+        gc.collect()
+    _assert_trees_equal(state, restored)
+
+
+def test_shard_keys_partition_disjoint_cover():
+    keys = [f"k{i}" for i in range(11)]
+    parts = [shard_keys(keys, i, 3) for i in range(3)]
+    assert sorted(sum(parts, [])) == sorted(keys)
+    for i in range(3):
+        for j in range(i + 1, 3):
+            assert not set(parts[i]) & set(parts[j])
+
+
+# ----------------------------------------------------- commit barrier
+def test_kill_between_npz_write_and_commit(tmp_path):
+    """Simulated kill after the shard npz landed but before meta.json:
+    latest_step stays at the previous checkpoint and restore still works
+    from it."""
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _state(1))
+    # step 2 "crashes": one of two shards lands (npz + marker), no commit
+    checkpoint.save(d, 2, _state(2), shard_index=0, num_shards=2)
+    step2 = os.path.join(d, "step_00000002")
+    assert os.path.exists(os.path.join(step2, "arrays-00000-of-00002.npz"))
+    assert not os.path.exists(os.path.join(step2, "meta.json"))
+    assert checkpoint.latest_step(d) == 1
+    _assert_trees_equal(_state(1), checkpoint.restore(d, 1, _state(0)))
+    with pytest.raises(CheckpointError, match="not committed"):
+        checkpoint.read_meta(d, 2)
+
+
+def test_multishard_commit_barrier_then_commit(tmp_path):
+    d = str(tmp_path)
+    state = _state(4)
+    checkpoint.save(d, 7, state, shard_index=1, num_shards=2)
+    assert checkpoint.latest_step(d) is None  # barrier holds
+    checkpoint.save(d, 7, state, shard_index=0, num_shards=2)
+    assert checkpoint.latest_step(d) == 7  # last shard commits
+    assert checkpoint.read_meta(d, 7)["num_shards"] == 2
+    _assert_trees_equal(state, checkpoint.restore(d, 7, _state(0)))
+
+
+# -------------------------------------------------------- retention GC
+def test_gc_reaps_stale_partials_never_newest_committed(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        checkpoint.save(d, s, _state(s))
+    # stale partial below the newest committed step: provably dead
+    checkpoint.save(d, 0, _state(0), shard_index=0, num_shards=2)
+    # partial ABOVE the newest committed step: may be mid-write, kept
+    checkpoint.save(d, 9, _state(9), shard_index=0, num_shards=2)
+    deleted = checkpoint.garbage_collect(d, keep_last_k=1)
+    assert sorted(deleted) == [0, 1, 2]
+    assert checkpoint.all_steps(d) == [3]  # newest committed survives
+    assert os.path.isdir(os.path.join(d, "step_00000009"))
+    # protected in-flight steps survive even when provably stale
+    checkpoint.save(d, 2, _state(2), shard_index=0, num_shards=2)
+    assert checkpoint.garbage_collect(d, keep_last_k=1, protect=(2,)) == []
+    assert os.path.isdir(os.path.join(d, "step_00000002"))
+
+
+# --------------------------------------------------------- validation
+def test_restore_rejects_foreign_target(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _state(1))
+    with pytest.raises(CheckpointError, match="does not match the restore"):
+        checkpoint.restore(d, 1, {"other": np.zeros(3)})
+
+
+def test_restore_rejects_tampered_shard(tmp_path):
+    """On-disk keys must agree with meta.json — a truncated or foreign
+    shard set raises a clear CheckpointError, not a KeyError."""
+    d = str(tmp_path)
+    state = _state(1)
+    checkpoint.save(d, 1, state)
+    shard = os.path.join(d, "step_00000001", "arrays-00000-of-00001.npz")
+    with np.load(shard) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    arrays.pop(sorted(arrays)[0])
+    arrays["rogue"] = np.zeros(2)
+    with open(shard, "wb") as f:
+        np.savez(f, **arrays)
+    with pytest.raises(CheckpointError, match="inconsistent with its meta"):
+        checkpoint.restore(d, 1, state)
+
+
+# -------------------------------------------------- async checkpointer
+def test_async_checkpointer_retention_and_roundtrip(tmp_path):
+    d = str(tmp_path)
+    ck = AsyncCheckpointer(d, keep_last_k=2)
+    states = {s: _state(s) for s in range(1, 6)}
+    for s in range(1, 6):
+        ck.save(s, states[s])
+    ck.wait(timeout=30.0)
+    assert checkpoint.all_steps(d) == [4, 5]
+    _assert_trees_equal(states[5], checkpoint.restore(d, 5, _state(0)))
+    ck.close()
+
+
+def test_async_checkpointer_sharded_commit(tmp_path):
+    """Two async "hosts" each write their shard; the checkpoint commits
+    only once both have landed, whichever finishes last."""
+    d = str(tmp_path)
+    state = _state(3)
+    hosts = [AsyncCheckpointer(d, keep_last_k=None, shard_index=i,
+                               num_shards=2) for i in range(2)]
+    hosts[0].save(1, state)
+    hosts[0].wait(timeout=30.0)
+    assert checkpoint.latest_step(d) is None  # half the state: no commit
+    hosts[1].save(1, state)
+    hosts[1].wait(timeout=30.0)
+    assert checkpoint.latest_step(d) == 1
+    _assert_trees_equal(state, checkpoint.restore(d, 1, _state(0)))
+    for h in hosts:
+        h.close()
+
+
+# ------------------------------------------------------ elastic restore
+@pytest.mark.parametrize("pods_save,pods_restore", [(4, 2), (2, 4)])
+def test_elastic_reshard_across_pod_counts(tmp_path, pods_save, pods_restore):
+    """A checkpoint written on a (pod=a, data, model) mesh restores
+    bitwise onto (pod=b, ...): the sharding rule tables, not the
+    checkpoint, decide leaf placement."""
+    d = str(tmp_path)
+    cfg = configs.get_smoke_config("minitron-4b").scaled(
+        compute_dtype="float32")
+    tc = steps.TrainConfig(optimizer="sgd", lr=1e-3)
+    mesh_a = make_host_mesh(pod=pods_save, data=8 // pods_save // 2, model=2)
+    mesh_b = make_host_mesh(pod=pods_restore, data=8 // pods_restore // 2,
+                            model=2)
+    state = steps.init_train_state(cfg, tc, jax.random.PRNGKey(3))
+    shard_a = steps.train_state_shardings(cfg, tc, mesh_a)
+    placed = jax.tree.map(jax.device_put, state, shard_a)
+    checkpoint.save(d, 5, placed, mesh_axes=dict(mesh_a.shape))
+    assert checkpoint.read_meta(d, 5)["mesh_axes"]["pod"] == pods_save
+    restored, step = steps.restore_train_state(d, cfg, tc, mesh_b)
+    assert step == 5
+    _assert_trees_equal(state, restored)
+    # leaves really live on mesh_b's placement now
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding.mesh.shape["pod"] == pods_restore
+
+
+def test_restore_train_state_raises_without_checkpoint(tmp_path):
+    cfg = configs.get_smoke_config("minitron-4b").scaled(
+        compute_dtype="float32")
+    tc = steps.TrainConfig(optimizer="sgd", lr=1e-3)
+    with pytest.raises(CheckpointError):
+        steps.restore_train_state(str(tmp_path), cfg, tc,
+                                  make_host_mesh(data=8))
