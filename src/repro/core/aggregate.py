@@ -25,6 +25,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import debug
 from repro.core import dither
 from repro.core.packing import PackGeometry, geometry_for_bits
 from repro.core.decompose import (
@@ -102,12 +103,29 @@ class AggregateGaussianMechanism:
         if self.per_coord and shape:
             flat = math.prod(shape)
             keys = jax.random.split(key, flat)
-            A, B = jax.vmap(lambda k: decompose_gaussian(tables, k))(keys)
+            if debug.active():
+                # checkify cannot functionalize batched while-loops, so
+                # under the sanitizer run the rejection sampler as a
+                # sequential scan instead of a vmap (debug-only cost)
+                A, B = jax.lax.map(
+                    lambda k: decompose_gaussian(tables, k), keys)
+            else:
+                A, B = jax.vmap(
+                    lambda k: decompose_gaussian(tables, k))(keys)
             A, B = A.reshape(shape), B.reshape(shape)
         else:
             A, B = decompose_gaussian(tables, key)
             A = jnp.broadcast_to(A, shape)
             B = jnp.broadcast_to(B, shape)
+        if debug.active():
+            # the exact-error claim degrades by P[A < a_min] in total
+            # variation; past this bound the geometry is mis-sized
+            debug.check(
+                jnp.mean((A < a_min).astype(jnp.float32))
+                <= debug.A_CLAMP_MASS_BOUND,
+                "global_randomness: A-clamp mass exceeds "
+                f"{debug.A_CLAMP_MASS_BOUND} (geometry too narrow for "
+                "clip/sigma)")
         return AggGaussShared(jnp.maximum(A, a_min), B)
 
     def a_min_for_range(self, t_range, *, msg_bits: int = 30):

@@ -1,0 +1,115 @@
+"""Runtime sanitizer layer for the exact-error pipeline (checkify).
+
+Static analysis (``tools/analysis``) catches the Python-level bug
+classes; this module catches the *numeric* ones at run time, when
+enabled: no-NaN decode output, no b-bit field overflow in the packed
+wire format, and bounded A-clamp mass in the DECOMPOSE draw.  The
+checks live inline in the codec (``repro.dist.compress``,
+``repro.core.aggregate``) as ``debug.check(pred, msg)`` calls and are
+compiled in only when a ``debug.checked``-wrapped entry point is being
+traced — so the default path pays nothing, and the shard_map mesh path
+(where checkify functionalization is not supported) never sees a check
+op.
+
+Enable globally with ``REPRO_DEBUG_CHECKS=1`` (the round protocol's
+jitted codec then routes through ``checked``), or locally::
+
+    with repro.debug.checks():
+        proto.decode(key, n, msgs, mask, d=d)   # raises on violation
+
+A failed check raises ``debug.SanitizeError`` from the entry point's
+``err.throw()``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+from typing import Callable, Optional
+
+import jax
+from jax.experimental import checkify
+
+__all__ = [
+    "A_CLAMP_MASS_BOUND",
+    "ENV_VAR",
+    "SanitizeError",
+    "active",
+    "check",
+    "checked",
+    "checks",
+    "sanitize_enabled",
+]
+
+ENV_VAR = "REPRO_DEBUG_CHECKS"
+
+# global_randomness clamps A at a_min; the exact-error argument tolerates
+# that only while P[A < a_min] stays negligible.  The decompose law puts
+# ~1e-3 mass there for sane geometries — 5% means the geometry is far
+# too narrow for the configured clip/sigma.
+A_CLAMP_MASS_BOUND = 0.05
+
+SanitizeError = checkify.JaxRuntimeError
+
+# Trace-time gate: True only while tracing under a `checked` entry point.
+_CHECKING: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_debug_checking", default=False)
+
+# Session override (tests, `with checks():`); None defers to the env.
+_FORCED: Optional[bool] = None
+
+
+def sanitize_enabled() -> bool:
+    """Should codec entry points compile with checks? (env/override)"""
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get(ENV_VAR, "").strip().lower() not in (
+        "", "0", "false", "off")
+
+
+@contextlib.contextmanager
+def checks(enabled: bool = True):
+    """Force the sanitizer on (or off) for the dynamic extent."""
+    global _FORCED
+    prev = _FORCED
+    _FORCED = bool(enabled)
+    try:
+        yield
+    finally:
+        _FORCED = prev
+
+
+def active() -> bool:
+    """True while tracing under a ``checked`` entry point — guard any
+    check whose *predicate* is expensive to build with this."""
+    return _CHECKING.get()
+
+
+def check(pred, msg: str, **fmt) -> None:
+    """``checkify.check`` that compiles to nothing outside ``checked``."""
+    if _CHECKING.get():
+        checkify.check(pred, msg, **fmt)
+
+
+def checked(fn: Callable, *, jit: bool = True) -> Callable:
+    """Wrap a jax-traceable ``fn`` so every ``debug.check`` on its trace
+    path is compiled in and enforced; the wrapper raises SanitizeError
+    on the first violated check and returns ``fn``'s output otherwise.
+    """
+    def gated(*args, **kwargs):
+        token = _CHECKING.set(True)
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            _CHECKING.reset(token)
+
+    inner = jax.jit(gated) if jit else gated
+    cf = checkify.checkify(inner, errors=checkify.user_checks)
+
+    def wrapper(*args, **kwargs):
+        err, out = cf(*args, **kwargs)
+        err.throw()
+        return out
+
+    wrapper.__name__ = getattr(fn, "__name__", "checked")
+    return wrapper

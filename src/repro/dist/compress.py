@@ -45,6 +45,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import debug
 from repro.core import coding, dither
 from repro.core.aggregate import AggregateGaussianMechanism
 from repro.core.distributions import Gaussian
@@ -147,6 +148,10 @@ def _psum_msg(m, comp: CompressionConfig, axis: Optional[str]):
         return jax.lax.psum(m, axis) if axis is not None else m
     m = m.astype(_MSG_DTYPES[comp.msg_dtype])
     if axis is not None:
+        # repro-lint: disable=int-width-discipline -- legacy unfused
+        # narrow-dtype path: geometry is clamped upstream when msg_bits
+        # is set; without it the documented wrap risk is the caller's
+        # (CompressionConfig docstring)
         m = jax.lax.psum(m, axis)
     return m.astype(jnp.int32)
 
@@ -203,6 +208,20 @@ def encode_leaf(x32, comp: CompressionConfig, step, s_i,
     """One client's integer message for a clipped f32 leaf: biased
     packed int32 words when fused, else the signed per-coordinate
     message (clamped to the shared geometry when one is active)."""
+    if debug.active():
+        debug.check(jnp.all(jnp.isfinite(x32)),
+                    "encode: non-finite input leaf")
+        if geom is not None and comp.mechanism != "irwin_hall":
+            # aggregate mechanisms size a_min so the natural (pre-clamp)
+            # message fits the b-bit field; a violation means the A
+            # clamp upstream is wrong and the clamped message silently
+            # biases the decoded mean.  (irwin_hall is exempt: its
+            # geometry cap clamps extreme messages by design.)
+            m_raw = dither.dither_encode(x32, step, s_i)
+            debug.check(
+                jnp.all(jnp.abs(m_raw) <= geom.m_max),
+                "encode: message overflows the b-bit field "
+                "(|m| > m_max={m_max})", m_max=jnp.int32(geom.m_max))
     if comp.fused:
         return ops.fused_pack_encode(x32, s_i, step, geom.bits, geom.m_max)
     m = dither.dither_encode(x32, step, s_i)
@@ -222,11 +241,37 @@ def decode_leaf_sum(m_sum, comp: CompressionConfig, n, r_msgs,
     be removed)."""
     step_dec = step / n  # python float stays scalar; arrays stay arrays
     if comp.fused:
+        if debug.active():
+            # each packed field carries sum_i (m_i + bias) over the
+            # r_msgs summed messages; anything above r_msgs * 2 * m_max
+            # means a tampered/overflowed lane that the bias-stripping
+            # decode below would silently turn into a wrong mean
+            fields = jnp.stack([
+                (m_sum.astype(jnp.uint32) >> jnp.uint32(geom.bits * j))
+                & jnp.uint32((1 << geom.bits) - 1)
+                for j in range(geom.group)
+            ])
+            debug.check(
+                jnp.all(fields <= jnp.uint32(r_msgs * 2 * geom.m_max)),
+                "decode: packed field sum exceeds r * 2 * m_max "
+                "(overflowed or tampered lane)")
         s_eff = s_sum + jnp.float32(r_msgs) * geom.bias
-        return ops.fused_unpack_decode(
+        y = ops.fused_unpack_decode(
             m_sum, s_eff, step_dec, offset, geom.bits, shape
         )
+        if debug.active():
+            debug.check(jnp.all(jnp.isfinite(y)),
+                        "decode: non-finite output (fused path)")
+        return y
+    if debug.active() and geom is not None:
+        debug.check(
+            jnp.all(jnp.abs(m_sum) <= r_msgs * geom.m_max),
+            "decode: summed message exceeds r * m_max for the "
+            "declared geometry")
     y = (m_sum.astype(jnp.float32) - s_sum) * step_dec
+    if debug.active():
+        debug.check(jnp.all(jnp.isfinite(y)),
+                    "decode: non-finite output")
     return y if offset is None else y + offset
 
 

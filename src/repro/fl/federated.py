@@ -94,6 +94,10 @@ class FederatedAveraging:
         cfg = self.cfg
         if self.proto is not None:
             msgs = np.stack([
+                # repro-lint: disable=rng-key-reuse -- the codec derives
+                # client pos's stream via split(key)[pos] internally, so
+                # passing the same round key per cohort member is the
+                # protocol's contract, not reuse
                 self.proto.client_message(key, n, pos, x)
                 for pos, x in enumerate(flat)
             ])

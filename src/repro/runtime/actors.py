@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from typing import Dict, Optional, Set, Tuple
 
@@ -112,6 +113,50 @@ def _safe_send(endpoint: ClientEndpoint, msg) -> None:
         pass
 
 
+class _HeartbeatBeacon:
+    """Sidecar thread that beacons liveness for the client actor.
+
+    The actor's main thread can be stuck inside a long first-round jit
+    compile (minutes for real models) — beaconing inline between recv
+    polls goes silent exactly then, and the learner evicts a healthy
+    client (ROADMAP PR 5 follow-up).  A daemon thread beacons on its own
+    clock instead; chaos crash windows ``pause()`` it so injected
+    crashes still look dead to the learner's eviction sweep.
+
+    The transport endpoints are queue-backed and thread-safe, so the
+    beacon shares the actor's endpoint.
+    """
+
+    def __init__(self, endpoint: ClientEndpoint, client_id: int,
+                 interval_s: float):
+        self._endpoint = endpoint
+        self._client_id = client_id
+        self._interval = float(interval_s)
+        self._stop = threading.Event()
+        self._paused = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name=f"fl-beacon-{client_id}", daemon=True)
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def pause(self) -> None:
+        self._paused.set()
+
+    def resume(self) -> None:
+        self._paused.clear()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+
+    def _run(self) -> None:
+        while not self._stop.wait(self._interval):
+            if not self._paused.is_set():
+                _safe_send(self._endpoint,
+                           Heartbeat(self._client_id, time.time()))
+
+
 def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
     if spec.compilation_cache_dir:
         _setup_compilation_cache(spec.compilation_cache_dir)
@@ -119,12 +164,21 @@ def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
     chaos = spec.chaos
     if spec.join_on_start:
         _safe_send(endpoint, JoinRequest(spec.client_id, time.time()))
-    last_beat = time.monotonic()
+    beacon = None
+    if spec.heartbeat_interval_s is not None:
+        beacon = _HeartbeatBeacon(endpoint, spec.client_id,
+                                  spec.heartbeat_interval_s)
+        beacon.start()
+    try:
+        _run_client_loop(endpoint, spec, grad, chaos, beacon)
+    finally:
+        if beacon is not None:
+            beacon.stop()
+
+
+def _run_client_loop(endpoint: ClientEndpoint, spec: ClientSpec, grad,
+                     chaos, beacon: Optional[_HeartbeatBeacon]) -> None:
     while True:
-        if (spec.heartbeat_interval_s is not None
-                and time.monotonic() - last_beat >= spec.heartbeat_interval_s):
-            _safe_send(endpoint, Heartbeat(spec.client_id, time.time()))
-            last_beat = time.monotonic()
         ann = endpoint.recv_latest(timeout=spec.idle_timeout_s)
         if ann is None or isinstance(ann, JoinAck):
             continue  # JoinAck: admission confirmed; next announce has work
@@ -137,11 +191,15 @@ def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
             if fault is not None:
                 if fault.rejoin_after_s is None:
                     return  # hard crash: the actor dies mid-round
-                # transient crash: silent through the round(s), then the
-                # elastic join path — announce ourselves and resume
+                # transient crash: dead silent through the round(s) —
+                # pause the beacon so the eviction sweep sees the crash
+                # — then the elastic join path: announce and resume
+                if beacon is not None:
+                    beacon.pause()
                 time.sleep(fault.rejoin_after_s)
                 _safe_send(endpoint, JoinRequest(spec.client_id, time.time()))
-                last_beat = time.monotonic()
+                if beacon is not None:
+                    beacon.resume()
                 continue
         if _is_straggler(spec, ann.rnd):
             time.sleep(spec.straggler_delay_s)
@@ -154,6 +212,9 @@ def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
             origin_round=ann.rnd,
             cohort_pos=pos,
             payload=spec.proto.client_message(key, n, pos, x),
+            # repro-lint: disable=rng-key-reuse -- both callees only
+            # *derive* from the round key (split inside); the second use
+            # re-derives the same dither key for provenance, by design
             dither_seed=np.asarray(protocol.client_dither_key(key, n, pos)),
             sent_at=time.time(),
         )
@@ -169,7 +230,6 @@ def run_client(endpoint: ClientEndpoint, spec: ClientSpec) -> None:
                 if attempt == spec.max_retries:
                     break  # give up; the learner proceeds without us
                 time.sleep(spec.retry_backoff_s * (2.0 ** attempt))
-        last_beat = time.monotonic()  # an update is itself a liveness proof
 
 
 class Learner:
@@ -346,9 +406,11 @@ class Learner:
         y, info = self._combine(rnd)
         norm = 0.0
         if y is not None:
-            self.params = np.asarray(
-                jnp.asarray(self.params) - self.fl.lr * y, np.float32)
-            norm = float(np.linalg.norm(np.asarray(y)))
+            # one device->host transfer; the SGD step and the norm then
+            # stay in numpy instead of bouncing params through the device
+            y_np = np.asarray(y, np.float32)
+            self.params = (self.params - self.fl.lr * y_np).astype(np.float32)
+            norm = float(np.linalg.norm(y_np))
         if (self.checkpointer is not None
                 and (rnd + 1) % self.checkpoint_every == 0):
             self.checkpointer.save(

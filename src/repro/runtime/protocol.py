@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import debug
 from repro.core import coding, dither
 from repro.core.aggregate import AggregateGaussianMechanism
 from repro.core.distributions import Gaussian
@@ -88,6 +89,8 @@ def client_dither_key(key, n: int, pos: int):
 def expected_dither_keys(key, n: int) -> np.ndarray:
     """(n, 2) uint32 key data of every announced cohort position."""
     _, ks = jax.random.split(key)
+    # repro-lint: disable=host-sync-under-trace -- intentional one-time
+    # transfer: key data must be host numpy to travel with the announce
     return np.asarray(jax.random.split(ks, n))
 
 
@@ -157,7 +160,10 @@ class RoundProtocol:
         words — the payloads of different clients then ADD
         homomorphically, so a secure-agg server never unpacks them."""
         x = np.asarray(x, np.float32)
-        m = _encode_jit(self, n, x.size)(key, jnp.int32(pos), x)
+        m = _encode_jit(self, n, x.size, debug.sanitize_enabled())(
+            key, jnp.int32(pos), x)
+        # repro-lint: disable=host-sync-under-trace -- the one intended
+        # device->host transfer per encode: the payload crosses the wire
         return np.asarray(m)
 
     # ----------------------------------------------------------- decode
@@ -178,9 +184,12 @@ class RoundProtocol:
             if self.packed:
                 raise ValueError("packed decode needs the update dim d")
             d = msgs.shape[-1]
-        y, bits = _decode_jit(self, n, int(d))(
+        y, bits = _decode_jit(self, n, int(d), debug.sanitize_enabled())(
             key, jnp.asarray(msgs), jnp.asarray(mask, bool)
         )
+        # repro-lint: disable=host-sync-under-trace -- one scalar sync
+        # per round decode, folded into the payload transfer the caller
+        # does anyway
         return y, float(bits)
 
 
@@ -198,8 +207,12 @@ def _layered_q(proto: RoundProtocol, n: int) -> LayeredQuantizer:
     )
 
 
+# repro-lint: disable=trace-cache -- cache key is hashable host data
+# (frozen proto, n, d, sanitize); the cached value is an opaque jitted
+# callable, so no tracer or device array ever crosses the cache
 @functools.lru_cache(maxsize=512)
-def _encode_jit(proto: RoundProtocol, n: int, d: int):
+def _encode_jit(proto: RoundProtocol, n: int, d: int,
+                sanitize: bool = False):
     comp = proto._comp() if proto.packed else None
 
     def encode(key, pos, x):
@@ -228,11 +241,15 @@ def _encode_jit(proto: RoundProtocol, n: int, d: int):
             m = q.encode(x, q.randomness(ck, (d,)))
         return m.astype(_MSG_DTYPES[proto.msg_dtype])
 
-    return jax.jit(encode)
+    return debug.checked(encode) if sanitize else jax.jit(encode)
 
 
+# repro-lint: disable=trace-cache -- cache key is hashable host data
+# (frozen proto, n, d, sanitize); the cached value is an opaque jitted
+# callable, so no tracer or device array ever crosses the cache
 @functools.lru_cache(maxsize=512)
-def _decode_jit(proto: RoundProtocol, n: int, d: int):
+def _decode_jit(proto: RoundProtocol, n: int, d: int,
+                sanitize: bool = False):
     comp = proto._comp() if proto.packed else None
 
     def decode(key, msgs, mask):
@@ -283,4 +300,4 @@ def _decode_jit(proto: RoundProtocol, n: int, d: int):
             y = (ys * maskf[:, None]).sum(0) / r
         return y, bits_pc
 
-    return jax.jit(decode)
+    return debug.checked(decode) if sanitize else jax.jit(decode)

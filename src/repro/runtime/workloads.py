@@ -131,6 +131,9 @@ class ModelGradWorkload:
         def grad(flat: np.ndarray, client_id: int, rnd: int) -> np.ndarray:
             data = synthetic.with_frontend_stubs(
                 batch_fn(dc, rnd, client=client_id), cfg)
+            # repro-lint: disable=host-sync-under-trace -- the one
+            # intended transfer per local round: the gradient must be
+            # host numpy to cross the client->learner transport
             return np.asarray(
                 flat_grad(jnp.asarray(flat, jnp.float32), data))
 

@@ -33,6 +33,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import registry, rwkv6, transformer, zamba2
 from repro.models.config import ModelConfig
@@ -225,11 +226,11 @@ class ServeEngine:
         }
 
     def occupancy(self, state) -> float:
-        return float(jnp.mean(state["active"].astype(jnp.float32)))
+        # the active mask is tiny; pull it once and reduce on the host
+        # rather than launching a device mean per scheduler tick
+        return float(np.asarray(state["active"]).mean())
 
     def free_slots(self, state):
-        import numpy as np
-
         return [int(i) for i in np.flatnonzero(~np.asarray(state["active"]))]
 
     # -------------------------------------------------------- prefill

@@ -1,0 +1,15 @@
+"""FIRE fixture: off-lock-actor-state — writes outside the lock."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.items = []
+
+    def bump(self):
+        self.count += 1
+
+    def push(self, x):
+        self.items.append(x)

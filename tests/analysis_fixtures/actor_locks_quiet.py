@@ -1,0 +1,23 @@
+"""QUIET fixture: off-lock-actor-state — writes under the lock; reads
+and non-actor classes are exempt."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.items = []
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+            self.items.append(self.count)
+
+    def peek(self):
+        return len(self.items)
+
+
+class NoLock:
+    def set(self, v):
+        self.v = v

@@ -1,0 +1,6 @@
+"""FIRE fixture: axis-name-consistency — a typo'd collective axis."""
+import jax
+
+
+def bad_axis(x):
+    return jax.lax.psum(x, "pdo")

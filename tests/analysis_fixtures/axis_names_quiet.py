@@ -1,0 +1,19 @@
+"""QUIET fixture: axis-name-consistency — canonical + module-local axes."""
+import jax
+from jax.sharding import Mesh
+
+
+def make(devices):
+    return Mesh(devices, ("rows",))
+
+
+def over_default(x):
+    return jax.lax.psum(x, "pod")
+
+
+def over_local(x):
+    return jax.lax.pmean(x, "rows")
+
+
+def dynamic(x, axis):
+    return jax.lax.pmax(x, axis)  # variable axis: not checked

@@ -1,0 +1,20 @@
+"""FIRE fixture: host-sync-under-trace (analyze as runtime/...).
+
+Three syncs inside a jitted function plus one in an untraced hot-path
+function -> 4 findings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced_sync(x):
+    s = float(jnp.sum(x))
+    a = np.asarray(jnp.abs(x))
+    t = jnp.mean(x).item()
+    return s + t + a.shape[0]
+
+
+def hot_loop_sync(x):
+    return float(jnp.sum(x))

@@ -1,0 +1,20 @@
+"""QUIET fixture: host-sync-under-trace (analyze as a non-hot module)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced_ok(x):
+    y = jnp.sum(x)
+    n = float(3.5)  # pure python float(), no device sync
+    return y * n
+
+
+def untraced_ok(x):
+    # untraced and not in runtime//serve/: a sync here is not hot
+    return float(jnp.sum(x))
+
+
+def np_only(x):
+    return np.asarray(np.abs(x))

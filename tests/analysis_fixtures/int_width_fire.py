@@ -1,0 +1,17 @@
+"""FIRE fixture: int-width-discipline (analyze OUTSIDE kernels/).
+
+Two manual shifts on array data plus a psum over a narrowed dtype ->
+3 findings.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def manual_shift(x):
+    w = jnp.asarray(x)
+    return (w << 3) | (w >> 2)
+
+
+def narrowed_psum(m):
+    m16 = jnp.asarray(m).astype(jnp.int16)
+    return jax.lax.psum(m16, "pod")

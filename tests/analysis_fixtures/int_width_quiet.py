@@ -1,0 +1,8 @@
+"""QUIET fixture: int-width-discipline — geometry-aware function owns
+the packed-field layout, so shifts are allowed."""
+import jax.numpy as jnp
+
+
+def unpack_field(word, geom, j):
+    mask = (1 << geom.bits) - 1
+    return (jnp.asarray(word) >> (geom.bits * j)) & mask

@@ -1,0 +1,15 @@
+"""FIRE fixture: rng-key-reuse — a key reaching two consumers."""
+import jax
+
+
+def two_consumers(key):
+    a = jax.random.normal(key)
+    b = jax.random.uniform(key)
+    return a + b
+
+
+def loop_no_fold(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.normal(key)
+    return total

@@ -1,0 +1,20 @@
+"""QUIET fixture: rng-key-reuse — split/fold_in between consumers."""
+import jax
+
+
+def split_then_use(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1) + jax.random.uniform(k2)
+
+
+def fold_per_iter(key, n):
+    total = 0.0
+    for i in range(n):
+        total += jax.random.normal(jax.random.fold_in(key, i))
+    return total
+
+
+def branches_are_exclusive(key, flag):
+    if flag:
+        return jax.random.normal(key)
+    return jax.random.uniform(key)

@@ -1,0 +1,16 @@
+"""FIRE fixture: trace-cache — caches on jax-touching functions."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=8)
+@jax.jit
+def traced_cached(n):
+    return jnp.zeros(n) + 1
+
+
+@functools.cache
+def cached_jax_body(n):
+    return jnp.arange(n)

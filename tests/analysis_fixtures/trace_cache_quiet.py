@@ -1,0 +1,12 @@
+"""QUIET fixture: trace-cache — caching pure host data is fine."""
+import functools
+
+
+@functools.lru_cache(maxsize=128)
+def fib(n):
+    return n if n < 2 else fib(n - 1) + fib(n - 2)
+
+
+@functools.cache
+def parse_flag(text):
+    return text.strip().lower() in ("1", "true", "yes")

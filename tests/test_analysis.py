@@ -1,0 +1,203 @@
+"""Self-tests for the repro-lint analyzer (tools/analysis).
+
+Every rule gets a fire fixture (must produce its findings at the
+expected count) and a quiet fixture (must stay silent); the waiver,
+fingerprint/baseline, and CLI layers are tested directly; and the last
+test is the repo gate itself — analyzing ``src/`` must come back clean.
+"""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.analysis import core  # noqa: E402
+from tools.analysis.rules import ALL_RULES, RULES_BY_NAME  # noqa: E402
+
+FIXTURES = pathlib.Path(__file__).parent / "analysis_fixtures"
+
+
+def _analyze(fixture, relpath):
+    src = (FIXTURES / fixture).read_text()
+    return core.analyze_source(src, relpath, ALL_RULES)
+
+
+# (rule, fire fixture, virtual relpath, expected findings,
+#        quiet fixture, quiet relpath)
+CASES = [
+    ("trace-cache", "trace_cache_fire.py", "src/repro/fl/fx.py", 2,
+     "trace_cache_quiet.py", "src/repro/fl/fx.py"),
+    ("host-sync-under-trace", "host_sync_fire.py",
+     "src/repro/runtime/fx.py", 4,
+     "host_sync_quiet.py", "src/repro/fl/fx.py"),
+    ("rng-key-reuse", "rng_reuse_fire.py", "src/repro/fl/fx.py", 2,
+     "rng_reuse_quiet.py", "src/repro/fl/fx.py"),
+    ("axis-name-consistency", "axis_names_fire.py", "src/repro/fl/fx.py", 1,
+     "axis_names_quiet.py", "src/repro/fl/fx.py"),
+    ("int-width-discipline", "int_width_fire.py", "src/repro/fl/fx.py", 3,
+     "int_width_quiet.py", "src/repro/fl/fx.py"),
+    ("off-lock-actor-state", "actor_locks_fire.py",
+     "src/repro/runtime/fx.py", 2,
+     "actor_locks_quiet.py", "src/repro/runtime/fx.py"),
+]
+
+
+def test_every_rule_has_a_fixture_pair():
+    assert len(ALL_RULES) >= 6
+    covered = {c[0] for c in CASES}
+    assert covered == set(RULES_BY_NAME)
+
+
+@pytest.mark.parametrize(
+    "rule,fixture,relpath,expected",
+    [(c[0], c[1], c[2], c[3]) for c in CASES], ids=[c[0] for c in CASES])
+def test_rule_fires_on_fixture(rule, fixture, relpath, expected):
+    report = _analyze(fixture, relpath)
+    hits = [f for f in report.findings if f.rule == rule]
+    assert len(hits) == expected, [f.render() for f in report.findings]
+    assert not report.errors
+    for f in hits:
+        assert f.line > 0 and f.message
+
+
+@pytest.mark.parametrize(
+    "rule,fixture,relpath",
+    [(c[0], c[4], c[5]) for c in CASES], ids=[c[0] for c in CASES])
+def test_rule_quiet_on_fixture(rule, fixture, relpath):
+    report = _analyze(fixture, relpath)
+    hits = [f for f in report.findings if f.rule == rule]
+    assert hits == [], [f.render() for f in hits]
+    assert not report.errors
+
+
+def test_int_width_allowed_inside_kernels():
+    # the same source that fires outside kernels/ is the owner inside it
+    report = _analyze("int_width_fire.py", "src/repro/kernels/fx.py")
+    assert [f for f in report.findings
+            if f.rule == "int-width-discipline"] == []
+
+
+# ------------------------------------------------------------- waivers
+FIRING_SRC = (FIXTURES / "axis_names_fire.py").read_text()
+
+
+def test_waiver_same_line_silences():
+    src = FIRING_SRC.replace(
+        'jax.lax.psum(x, "pdo")',
+        'jax.lax.psum(x, "pdo")  '
+        '# repro-lint: disable=axis-name-consistency -- testing the waiver')
+    report = core.analyze_source(src, "src/repro/fl/fx.py", ALL_RULES)
+    assert report.findings == [] and report.errors == []
+    assert len(report.waived) == 1
+    assert report.waived[0][1] == "testing the waiver"
+
+
+def test_waiver_standalone_comment_applies_to_next_code_line():
+    src = FIRING_SRC.replace(
+        '    return jax.lax.psum(x, "pdo")',
+        '    # repro-lint: disable=axis-name-consistency -- testing\n'
+        '    return jax.lax.psum(x, "pdo")')
+    report = core.analyze_source(src, "src/repro/fl/fx.py", ALL_RULES)
+    assert report.findings == [] and report.errors == []
+    assert len(report.waived) == 1
+
+
+def test_waiver_without_reason_is_an_error_and_does_not_silence():
+    src = FIRING_SRC.replace(
+        'jax.lax.psum(x, "pdo")',
+        'jax.lax.psum(x, "pdo")  # repro-lint: disable=axis-name-consistency')
+    report = core.analyze_source(src, "src/repro/fl/fx.py", ALL_RULES)
+    assert [f.rule for f in report.findings] == ["axis-name-consistency"]
+    assert [e.rule for e in report.errors] == ["waiver-missing-reason"]
+
+
+def test_unused_waiver_is_an_error():
+    src = ("import jax\n"
+           "# repro-lint: disable=trace-cache -- nothing here fires\n"
+           "def ok(x):\n"
+           "    return x\n")
+    report = core.analyze_source(src, "src/repro/fl/fx.py", ALL_RULES)
+    assert [e.rule for e in report.errors] == ["waiver-unused"]
+
+
+def test_wildcard_waiver_covers_any_rule():
+    src = FIRING_SRC.replace(
+        'jax.lax.psum(x, "pdo")',
+        'jax.lax.psum(x, "pdo")  # repro-lint: disable=* -- blanket')
+    report = core.analyze_source(src, "src/repro/fl/fx.py", ALL_RULES)
+    assert report.findings == [] and len(report.waived) == 1
+
+
+# ------------------------------------------------- fingerprints/baseline
+def test_fingerprints_stable_and_occurrence_indexed():
+    report = core.analyze_source(FIRING_SRC, "src/repro/fl/fx.py", ALL_RULES)
+    lines = FIRING_SRC.splitlines()
+    fps1 = core.fingerprints_for(report.findings,
+                                 {"src/repro/fl/fx.py": lines})
+    fps2 = core.fingerprints_for(report.findings,
+                                 {"src/repro/fl/fx.py": lines})
+    assert fps1 == fps2 and len(set(fps1)) == len(fps1)
+    # two identical findings on identical lines get distinct occurrence
+    # indices (so a baseline covers exactly as many as it recorded)
+    f = report.findings[0]
+    twin = core.Finding(f.rule, f.path, f.line, f.col, f.message)
+    fps = core.fingerprints_for([f, twin], {"src/repro/fl/fx.py": lines})
+    assert fps[0] != fps[1]
+
+
+def test_parse_error_is_reported_not_raised():
+    report = core.analyze_source("def broken(:\n", "src/repro/fl/fx.py",
+                                 ALL_RULES)
+    assert [e.rule for e in report.errors] == ["parse-error"]
+
+
+# ----------------------------------------------------------------- CLI
+def _run_cli(*argv, cwd=REPO_ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.analysis", *argv],
+        cwd=cwd, capture_output=True, text=True)
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    (tmp_path / "ok.py").write_text("def f(x):\n    return x + 1\n")
+    proc = _run_cli(str(tmp_path))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_cli_finding_exits_nonzero_and_baseline_flow(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text((FIXTURES / "rng_reuse_fire.py").read_text())
+    proc = _run_cli(str(bad))
+    assert proc.returncode == 1
+    assert "rng-key-reuse" in proc.stdout
+
+    baseline = tmp_path / "baseline.json"
+    proc = _run_cli(str(bad), "--baseline", str(baseline),
+                    "--update-baseline")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(baseline.read_text())
+    assert len(data["fingerprints"]) == 2
+
+    proc = _run_cli(str(bad), "--baseline", str(baseline))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_rule_filter(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text((FIXTURES / "rng_reuse_fire.py").read_text())
+    proc = _run_cli(str(bad), "--rule", "trace-cache")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------------ repo gate
+def test_repo_src_is_clean():
+    """The exact CI gate: zero unwaived findings in src/."""
+    proc = _run_cli("src", "--baseline",
+                    str(REPO_ROOT / "tools/analysis/baseline.json"))
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -240,6 +240,71 @@ def test_slow_uplink_late_but_complete():
     _no_double_decode(records)
 
 
+# ------------------------------------- heartbeat-during-compile (PR 5)
+class SlowFirstGradWorkload:
+    """QuadraticWorkload whose FIRST grad call per client blocks for
+    ``stall_s`` — a stand-in for a long first-round jit compile that
+    pins the client actor's main thread."""
+
+    def __init__(self, n_clients, d, seed=0, stall_s=1.2):
+        self.inner = QuadraticWorkload(n_clients, d, seed=seed)
+        self.stall_s = stall_s
+
+    def init_params(self):
+        return self.inner.init_params()
+
+    def build(self):
+        import time as _time
+
+        inner_grad = self.inner.build()
+        stalled = set()
+
+        def grad(flat, client_id, rnd):
+            if client_id not in stalled:
+                stalled.add(client_id)
+                _time.sleep(self.stall_s)
+            return inner_grad(flat, client_id, rnd)
+
+        return grad
+
+
+def _run_slow_compile(rounds=3, stall_s=1.2, timeout_s=0.6):
+    rc = _rc(heartbeat_timeout_s=timeout_s, quorum=1.0,
+             round_timeout_s=15.0)
+    wl = SlowFirstGradWorkload(N, D, seed=SEED, stall_s=stall_s)
+    rt = AsyncFederatedRuntime(rc, wl)
+    _warm_codec(rt.proto, D)
+    return rt.run(wl.init_params(), rounds)
+
+
+def test_heartbeat_survives_long_first_compile():
+    """A first-round stall 2x the heartbeat timeout must NOT get the
+    client evicted: the sidecar beacon thread keeps beaconing while the
+    main actor thread is stuck in the (simulated) jit compile."""
+    params, summary, records = _run_slow_compile()
+    assert summary["rounds"] == 3
+    assert summary["evictions"] == 0
+    assert summary["active_members_final"] == N
+    # the stalled round still realized the full cohort (nobody evicted,
+    # round_timeout generous enough for the stall)
+    assert records[0].realized_current == N
+    assert records[-1].realized_current == N
+    assert np.all(np.isfinite(params))
+
+
+def test_heartbeat_stall_would_evict_without_sidecar(monkeypatch):
+    """Counterfactual pin: silence the sidecar and the same stall DOES
+    trip heartbeat_timeout_s — proving the regression test above
+    actually exercises the beacon, not a generous timeout."""
+    from repro.runtime import actors
+
+    monkeypatch.setattr(actors._HeartbeatBeacon, "_run",
+                        lambda self: None)
+    params, summary, records = _run_slow_compile()
+    assert summary["rounds"] == 3
+    assert summary["evictions"] >= 1
+
+
 # --------------------------------------------- kill-and-resume (sync FL)
 def test_sync_loop_kill_and_resume_bitwise(tmp_path):
     """FederatedAveraging.run with checkpointing: stop after 3 rounds,

@@ -1,0 +1,252 @@
+"""PackGeometry boundary pins + checkify sanitizer injection tests.
+
+Three groups:
+
+  * geometry invariants — the carry-free inequality n * 2 * m_max
+    <= 2^b - 1 over the whole admitted (b, n) range (hypothesis), and
+    the minimality of ``geometry_for_range``'s derived width;
+  * the b=24 cap and carry-freeness at the max admitted client count,
+    simulated in numpy with real int32 wraparound (bit 31 included);
+  * the ``repro.debug`` sanitizer: bit-identical when clean, and a
+    deliberately injected b-bit field overflow that the non-sanitized
+    path silently decodes WRONG is caught under ``debug.checks()``.
+"""
+import numpy as np
+import pytest
+
+from repro import debug
+from repro.core.packing import geometry_for_bits, geometry_for_range
+from repro.dist import compress as dcompress
+from repro.kernels import ops
+from repro.runtime import protocol
+
+try:  # dev extra (see pyproject); installed in CI
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------- geometry invariants
+def _check_carry_free(bits, n):
+    try:
+        geom = geometry_for_bits(bits, n)
+    except ValueError:
+        # admitted only while the clamp range stays meaningful
+        assert ((1 << bits) - 1) // (2 * n) < 2
+        return
+    # the carry-free condition: n biased fields sum below 2^bits
+    assert geom.n * 2 * geom.m_max <= (1 << geom.bits) - 1
+    assert geom.m_max >= 2
+    assert geom.bias == geom.m_max
+    assert geom.group == max(32 // bits, 1)
+    # and the clamp is maximal: one more unit of m_max would carry
+    assert geom.n * 2 * (geom.m_max + 1) > (1 << geom.bits) - 1
+
+
+def _check_range_minimal(m_max, n):
+    try:
+        geom = geometry_for_range(m_max, n)
+    except ValueError:
+        assert 2 * m_max * n + 1 > (1 << 32)
+        return
+    assert geom.n * 2 * geom.m_max <= (1 << geom.bits) - 1
+    # minimal width: one bit fewer could not hold the summed range
+    if geom.bits > 2:
+        assert 2 * m_max * n + 1 > (1 << (geom.bits - 1))
+
+
+def test_geometry_invariants_sweep():
+    """Deterministic sweep of the hypothesis properties below — runs
+    even without the hypothesis dev extra."""
+    for bits in range(2, 25):
+        nmax = ((1 << bits) - 1) // 4
+        for n in {1, 2, 3, nmax - 1, nmax, nmax + 1, 2 * nmax + 5}:
+            if n >= 1:
+                _check_carry_free(bits, n)
+    for m_max in (1, 2, 3, 42, 1 << 10, 1 << 20, (1 << 27) - 1):
+        for n in (1, 2, 3, 17, 1024, 4096):
+            _check_range_minimal(m_max, n)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(bits=st.integers(2, 24), n=st.integers(1, 5000))
+    def test_geometry_for_bits_carry_free_inequality(bits, n):
+        _check_carry_free(bits, n)
+
+    @settings(max_examples=200, deadline=None)
+    @given(m_max=st.integers(1, 1 << 20), n=st.integers(1, 4096))
+    def test_geometry_for_range_width_is_minimal(m_max, n):
+        _check_range_minimal(m_max, n)
+
+
+def test_n_words_and_payload_bytes():
+    geom = geometry_for_bits(8, 3)  # group = 4
+    assert geom.n_words(128) == 32
+    assert geom.n_words(129) == 33
+    assert geom.payload_bytes(128) == 128
+
+
+# ------------------------------------------------------------- b=24 cap
+def test_b24_cap_pinned_everywhere():
+    """b <= 24 keeps every recoverable field sum < 2^24, i.e. exactly
+    representable in float32 — the fused decode multiplies the unpacked
+    sum straight into f32."""
+    geom = geometry_for_bits(24, 1)
+    assert float(np.float32(geom.n * 2 * geom.m_max)) == geom.n * 2 * geom.m_max
+    assert dcompress._DEFAULT_PACK_BITS["int32"] == 24
+
+    with pytest.raises(ValueError, match=r"\[2, 24\]"):
+        ops.fused_pack_encode(np.zeros(128, np.float32),
+                              np.zeros(128, np.float32), 1.0, 25, 100)
+    with pytest.raises(ValueError, match=r"\[2, 24\]"):
+        dcompress.CompressionConfig(msg_bits=25)
+    with pytest.raises(ValueError, match=r"\[2, 24\]"):
+        dcompress.CompressionConfig(msg_bits=1)
+    with pytest.raises(ValueError, match="32 bits"):
+        geometry_for_range(1 << 20, 1 << 13)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 14])
+def test_carry_free_at_max_admitted_clients_int32_wraparound(bits):
+    """At the LARGEST n the geometry admits for width b, pack random
+    extreme messages for all n clients, sum the packed int32 words with
+    real two's-complement wraparound, and recover every field sum
+    exactly by masked shifts — including top fields touching bit 31."""
+    n = ((1 << bits) - 1) // 4  # largest n with m_max >= 2
+    geom = geometry_for_bits(bits, n)
+    assert geom.n == n and geom.m_max >= 2
+    G = geom.group
+    W = 8  # words per client
+    rng = np.random.default_rng(bits)
+    # bias toward the clamp edges so field sums actually reach the cap
+    m = rng.choice(
+        np.array([-geom.m_max, -1, 0, 1, geom.m_max], np.int64),
+        size=(n, W, G), p=[0.35, 0.1, 0.1, 0.1, 0.35])
+    u = m + geom.bias  # unsigned biased fields in [0, 2*m_max]
+    shifts = (bits * np.arange(G, dtype=np.int64))[None, None, :]
+    words = (u << shifts).sum(-1).astype(np.int32)  # per-client packing
+    # the psum: int64 accumulate then truncate == int32 wraparound sum
+    word_sum = words.astype(np.int64).sum(0).astype(np.int32)
+    wu = word_sum.view(np.uint32).astype(np.int64)
+    mask = (1 << bits) - 1
+    ref = u.sum(0)  # exact field sums, no wraparound
+    assert ref.max() <= mask  # the carry-free precondition held
+    for j in range(G):
+        np.testing.assert_array_equal((wu >> (bits * j)) & mask, ref[:, j])
+
+
+# ------------------------------------------------------------ sanitizer
+def _packed_proto():
+    return protocol.RoundProtocol(mechanism="irwin_hall", sigma=1e-3,
+                                  packed=True, msg_bits=8)
+
+
+def _messages(proto, key, n, d, scale=0.1):
+    rng = np.random.default_rng(0)
+    x = [rng.standard_normal(d).astype(np.float32) * scale
+         for _ in range(n)]
+    return np.stack([proto.client_message(key, n, p, x[p])
+                     for p in range(n)])
+
+
+def test_sanitizer_clean_path_bit_identical():
+    """Enabling the checkify sanitizer must not change a single bit of
+    the codec's output (it only adds assertions)."""
+    proto, n, d = _packed_proto(), 3, 256
+    key = protocol.round_key(7, 0)
+    msgs = _messages(proto, key, n, d)
+    y0, b0 = proto.decode(key, n, msgs, np.ones(n, bool), d=d)
+    with debug.checks():
+        assert debug.sanitize_enabled()
+        msgs1 = _messages(proto, key, n, d)
+        y1, b1 = proto.decode(key, n, msgs1, np.ones(n, bool), d=d)
+    np.testing.assert_array_equal(msgs, msgs1)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    assert b0 == b1
+
+
+def test_sanitizer_catches_injected_field_overflow():
+    """Seeded injection: with realized r=2 of an announced n=3 cohort,
+    pushing one packed lane past r * 2 * m_max is invisible to the
+    plain decode (it silently returns a wrong mean) but raises under
+    the sanitizer."""
+    proto, n, d = _packed_proto(), 3, 256
+    key = protocol.round_key(7, 0)
+    geom = dcompress.leaf_geometry(proto._comp(), n)
+    bound = 2 * 2 * geom.m_max  # r=2 realized messages
+    assert bound < (1 << geom.bits) - 1  # headroom to inject w/o carry
+
+    msgs = _messages(proto, key, n, d)
+    mask = np.array([True, True, False])  # client 2 never reported
+    field_mask = (1 << geom.bits) - 1
+    # first word whose low lanes leave carry-free room for the bump
+    w = next(w for w in range(msgs.shape[1])
+             if (int(msgs[0, w]) & field_mask)
+             + (int(msgs[1, w]) & field_mask) < field_mask)
+    lane_sum = (int(msgs[0, w]) & field_mask) + \
+        (int(msgs[1, w]) & field_mask)
+    tampered = msgs.copy()
+    tampered[0, w] += field_mask - lane_sum  # lane sum -> 2^b - 1 > bound
+
+    y_clean, _ = proto.decode(key, n, msgs, mask, d=d)
+    y_bad, _ = proto.decode(key, n, tampered, mask, d=d)
+    # the non-sanitized path decodes WITHOUT error — and wrongly
+    delta = np.abs(np.asarray(y_bad) - np.asarray(y_clean)).max()
+    assert delta > 0.0
+    with debug.checks():
+        with pytest.raises(debug.SanitizeError,
+                           match="packed field sum exceeds"):
+            proto.decode(key, n, tampered, mask, d=d)
+
+
+def test_sanitizer_catches_encode_overflow():
+    """A mis-sized step (bypassing a_min_for_geometry) overflows the
+    pre-clamp message; the encode-side check refuses to let the clamp
+    silently bias the mean."""
+    import jax.numpy as jnp
+
+    comp = dcompress.CompressionConfig(mechanism="aggregate_gaussian",
+                                       sigma=1e-3, fused=True)
+    geom = dcompress.leaf_geometry(comp, 3)
+    bad_encode = debug.checked(
+        lambda x, s: dcompress.encode_leaf(
+            x, comp, jnp.float32(1e-12), s, geom))
+    with debug.checks():
+        with pytest.raises(debug.SanitizeError,
+                           match="overflows the b-bit field"):
+            bad_encode(np.full(128, 0.5, np.float32),
+                       np.zeros(128, np.float32))
+
+
+def test_sanitizer_bounds_a_clamp_mass():
+    """An absurd a_min clamps (nearly) every A draw; the sanitizer's
+    total-variation bound on the clamp mass rejects the geometry."""
+    import jax
+
+    from repro.core.aggregate import AggregateGaussianMechanism
+
+    mech = AggregateGaussianMechanism(3, 1e-3)
+    key = jax.random.PRNGKey(0)
+    ok = debug.checked(
+        lambda k: mech.global_randomness(k, (512,), a_min=1e-6))
+    bad = debug.checked(
+        lambda k: mech.global_randomness(k, (512,), a_min=100.0))
+    with debug.checks():
+        ok(key)  # tiny a_min: clamp mass ~0, passes
+        with pytest.raises(debug.SanitizeError, match="A-clamp mass"):
+            bad(key)
+
+
+def test_sanitizer_env_and_override(monkeypatch):
+    monkeypatch.delenv(debug.ENV_VAR, raising=False)
+    assert not debug.sanitize_enabled()
+    monkeypatch.setenv(debug.ENV_VAR, "1")
+    assert debug.sanitize_enabled()
+    with debug.checks(False):
+        assert not debug.sanitize_enabled()
+    monkeypatch.setenv(debug.ENV_VAR, "0")
+    assert not debug.sanitize_enabled()
+    # outside `checked`, debug.check is a no-op even when enabled
+    debug.check(False, "never raised")

@@ -1,0 +1,15 @@
+"""repro-lint: AST-based static analysis for the exact-error pipeline.
+
+Run as ``python -m tools.analysis src/`` from the repo root.  See
+tools/analysis/README.md for the rule catalog and waiver syntax.
+"""
+from __future__ import annotations
+
+from tools.analysis.core import (  # noqa: F401
+    Finding,
+    analyze_file,
+    analyze_source,
+    load_baseline,
+    write_baseline,
+)
+from tools.analysis.rules import ALL_RULES, RULES_BY_NAME  # noqa: F401

@@ -1,0 +1,113 @@
+"""CLI driver: ``python -m tools.analysis src/ [--baseline FILE]``.
+
+Exit status 0 iff every finding is either inline-waived or baselined.
+``--update-baseline`` rewrites the baseline to the current finding set
+(for landing a new rule ahead of its sweep); ``--explain`` prints the
+rule catalog.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Sequence
+
+from tools.analysis.core import (FileReport, analyze_file, fingerprints_for,
+                                 load_baseline, write_baseline)
+from tools.analysis.rules import ALL_RULES, RULES_BY_NAME
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+    return out
+
+
+def main(argv: Sequence[str] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repro-lint: JAX/FL-aware static analysis")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to analyze")
+    parser.add_argument("--baseline", default=None,
+                        help="JSON file of known-finding fingerprints")
+    parser.add_argument("--update-baseline", action="store_true",
+                        help="rewrite --baseline with current findings")
+    parser.add_argument("--rule", action="append", default=None,
+                        help="run only the named rule(s)")
+    parser.add_argument("--explain", action="store_true",
+                        help="print the rule catalog and exit")
+    parser.add_argument("--show-waived", action="store_true",
+                        help="also print waived findings with reasons")
+    args = parser.parse_args(argv)
+
+    if args.explain:
+        for rule in ALL_RULES:
+            print(f"{rule.NAME}\n    {rule.DOC}")
+        return 0
+
+    rules = ALL_RULES
+    if args.rule:
+        missing = [r for r in args.rule if r not in RULES_BY_NAME]
+        if missing:
+            print(f"unknown rule(s): {', '.join(missing)}", file=sys.stderr)
+            return 2
+        rules = tuple(RULES_BY_NAME[r] for r in args.rule)
+
+    files = iter_py_files(args.paths or ["src"])
+    if not files:
+        print("no python files found", file=sys.stderr)
+        return 2
+
+    reports: List[FileReport] = []
+    lines_by_path: Dict[str, List[str]] = {}
+    for path in files:
+        rel = os.path.relpath(path).replace(os.sep, "/")
+        report = analyze_file(path, rel, rules)
+        reports.append(report)
+        with open(path, "r", encoding="utf-8") as fh:
+            lines_by_path[rel] = fh.read().splitlines()
+
+    findings = [f for r in reports for f in r.findings]
+    errors = [e for r in reports for e in r.errors]
+    waived = [(f, reason) for r in reports for f, reason in r.waived]
+
+    if args.baseline and args.update_baseline:
+        fps = fingerprints_for(findings, lines_by_path)
+        write_baseline(args.baseline, fps)
+        print(f"baseline updated: {len(fps)} finding(s) -> {args.baseline}")
+        return 0
+
+    baselined: List = []
+    if args.baseline and os.path.exists(args.baseline):
+        known = load_baseline(args.baseline)
+        fps = fingerprints_for(findings, lines_by_path)
+        kept = []
+        for f, fp in zip(findings, fps):
+            (baselined if fp in known else kept).append(f)
+        findings = kept
+
+    for f in findings + errors:
+        print(f.render())
+    if args.show_waived:
+        for f, reason in waived:
+            print(f"{f.location()}: waived[{f.rule}]: {reason}")
+
+    n_bad = len(findings) + len(errors)
+    print(f"repro-lint: {n_bad} finding(s) "
+          f"({len(waived)} waived, {len(baselined)} baselined) "
+          f"in {len(files)} file(s)")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,329 @@
+"""Per-module analysis context shared by all repro-lint rules.
+
+Everything here is a *per-module* approximation: repro-lint never
+imports the code under analysis and never resolves names across module
+boundaries.  The context answers three questions the rules keep asking:
+
+  * What fully-qualified thing does this name/attribute refer to?
+    (import-alias resolution: ``jnp.mean`` -> ``jax.numpy.mean``)
+  * Which functions in this module are (transitively) traced — jitted,
+    vmapped, passed to scan/shard_map, nested inside such a function,
+    or reached from one through the intra-module call graph?
+  * Is this expression rooted in a jax value (literally ``jax.*`` /
+    ``jnp.*``, or a local name bound from such an expression)?
+
+The trace-closure computation is deliberately an over-approximation
+(any function whose *name* matches a callee in a traced body is marked
+traced) — for a lint pass, marking too much traced only makes the
+host-sync rule slightly stricter, which is the safe direction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+# Wrappers whose *decorated/called* function body runs under trace.
+TRACE_WRAPPERS = {
+    "jax.jit",
+    "jax.pmap",
+    "jax.vmap",
+    "jax.grad",
+    "jax.value_and_grad",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.custom_jvp",
+    "jax.custom_vjp",
+}
+
+# Calls whose function-valued argument runs under trace.
+TRACE_CALLS = TRACE_WRAPPERS | {
+    "jax.shard_map",
+    "jax.experimental.shard_map.shard_map",
+    "jax.lax.scan",
+    "jax.lax.map",
+    "jax.lax.cond",
+    "jax.lax.switch",
+    "jax.lax.while_loop",
+    "jax.lax.fori_loop",
+    "jax.lax.associative_scan",
+    "jax.experimental.checkify.checkify",
+}
+
+# A body containing one of these runs inside shard_map/pmap by
+# construction — mark it traced even if the wrapper lives elsewhere.
+COLLECTIVE_OPS = {
+    "jax.lax.psum",
+    "jax.lax.pmean",
+    "jax.lax.pmax",
+    "jax.lax.pmin",
+    "jax.lax.psum_scatter",
+    "jax.lax.all_gather",
+    "jax.lax.ppermute",
+    "jax.lax.axis_index",
+    "jax.lax.axis_size",
+}
+
+
+def _walk_no_nested_functions(node: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``node``'s body without descending into nested def/class.
+
+    Lambdas ARE descended into — they execute in the enclosing trace
+    context, unlike a nested ``def`` which is only traced if called.
+    """
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+class ModuleContext:
+    """Parsed module + alias table + trace closure, handed to rules."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+
+        # alias -> fully qualified module/name ("jnp" -> "jax.numpy",
+        # "lru_cache" -> "functools.lru_cache")
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+        self.functions: List[FunctionNode] = [
+            n for n in ast.walk(self.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        self._by_name: Dict[str, List[FunctionNode]] = {}
+        for fn in self.functions:
+            self._by_name.setdefault(fn.name, []).append(fn)
+
+        self.traced: Set[ast.AST] = set()
+        self._compute_trace_closure()
+
+    # ---------------------------------------------------------- names
+
+    def qualname(self, node: Optional[ast.AST]) -> Optional[str]:
+        """Dotted name of an expression through the alias table, or None
+        for anything that isn't a plain Name/Attribute chain."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(self.aliases.get(node.id, node.id))
+        return ".".join(reversed(parts))
+
+    def call_qualname(self, call: ast.Call) -> Optional[str]:
+        return self.qualname(call.func)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FunctionNode]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return None
+            cur = self.parents.get(cur)
+        return None
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+    # ------------------------------------------------------ jax roots
+
+    def is_jax_qual(self, qual: Optional[str]) -> bool:
+        return bool(qual) and (qual == "jax" or qual.startswith("jax."))
+
+    def expr_mentions_jax(self, node: ast.AST) -> bool:
+        """True if any name inside ``node`` resolves under ``jax.``."""
+        for n in ast.walk(node):
+            if isinstance(n, (ast.Name, ast.Attribute)):
+                if self.is_jax_qual(self.qualname(n)):
+                    return True
+        return False
+
+    def jax_local_names(self, fn: FunctionNode) -> Set[str]:
+        """Local names bound (directly or one hop) from jax expressions.
+
+        Two passes give cheap transitivity: ``a = jnp.mean(x); b = a * 2``
+        marks both ``a`` and ``b``.
+        """
+        names: Set[str] = set()
+        for _ in range(2):
+            for node in _walk_no_nested_functions(fn):
+                if not isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    continue
+                value = node.value
+                if value is None:
+                    continue
+                rooted = self.expr_mentions_jax(value) or any(
+                    isinstance(n, ast.Name) and n.id in names
+                    for n in ast.walk(value)
+                )
+                if not rooted:
+                    continue
+                targets = (
+                    node.targets if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name):
+                            names.add(leaf.id)
+        return names
+
+    def is_jax_rooted(self, node: ast.AST, local_jax: Set[str]) -> bool:
+        """Expression textually involves jax, or a name known-bound from
+        a jax expression in the same function."""
+        if self.expr_mentions_jax(node):
+            return True
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and n.id in local_jax:
+                return True
+        return False
+
+    # -------------------------------------------------- trace closure
+
+    def _decorator_quals(self, fn: FunctionNode) -> Iterator[str]:
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            q = self.qualname(target)
+            if q:
+                yield q
+            # functools.partial(jax.jit, ...) as a decorator factory
+            if isinstance(dec, ast.Call):
+                for arg in dec.args:
+                    aq = self.qualname(arg)
+                    if aq:
+                        yield aq
+
+    def _mark_traced(self, fn: ast.AST) -> None:
+        if fn in self.traced:
+            return
+        self.traced.add(fn)
+        # everything defined inside a traced function is traced
+        for node in ast.walk(fn):
+            if node is not fn and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                self.traced.add(node)
+
+    def _resolve_lexical(self, name: str, at: ast.AST) -> List[FunctionNode]:
+        """Function defs named ``name`` visible from ``at``, nearest
+        enclosing scope first — so ``jax.jit(decode)`` inside a factory
+        resolves to the factory's nested ``decode``, not an unrelated
+        method that happens to share the name."""
+        candidates = self._by_name.get(name, [])
+        if len(candidates) <= 1:
+            return candidates
+        scopes = [self.tree] + [
+            a for a in self.ancestors(at)
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda, ast.ClassDef))
+        ]
+        for scope in scopes[1:] + [self.tree]:  # innermost outward
+            hits = [fn for fn in candidates if self.parents.get(fn) is scope]
+            if hits:
+                return hits
+        return candidates
+
+    def _compute_trace_closure(self) -> None:
+        # seed 1: decorated with a trace wrapper
+        for fn in self.functions:
+            if any(q in TRACE_WRAPPERS for q in self._decorator_quals(fn)):
+                self._mark_traced(fn)
+
+        # seed 2: passed by name (or as a lambda / self.method) to a
+        # trace-entering call, incl. `self._f_jit = jax.jit(self._f)`
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = self.call_qualname(node)
+            if q not in TRACE_CALLS:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    self._mark_traced(arg)
+                name = None
+                if isinstance(arg, ast.Name):
+                    name = arg.id
+                elif isinstance(arg, ast.Attribute):
+                    name = arg.attr  # self._step_impl and friends
+                if name:
+                    for fn in self._resolve_lexical(name, node):
+                        self._mark_traced(fn)
+
+        # seed 3: contains a collective -> runs under shard_map/pmap
+        for fn in self.functions:
+            for node in _walk_no_nested_functions(fn):
+                if isinstance(node, ast.Call) and \
+                        self.call_qualname(node) in COLLECTIVE_OPS:
+                    self._mark_traced(fn)
+                    break
+
+        # closure: callees of traced functions (by simple name) are traced
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(self.traced):
+                if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                       ast.Lambda)):
+                    continue
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = None
+                    if isinstance(node.func, ast.Name):
+                        name = node.func.id
+                    elif isinstance(node.func, ast.Attribute) and isinstance(
+                        node.func.value, ast.Name
+                    ) and node.func.value.id == "self":
+                        name = node.func.attr
+                    if not name:
+                        continue
+                    for callee in self._by_name.get(name, []):
+                        if callee not in self.traced:
+                            self._mark_traced(callee)
+                            changed = True
+
+    def is_traced(self, fn: ast.AST) -> bool:
+        return fn in self.traced
+
+    # ------------------------------------------------------- helpers
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""

@@ -1,0 +1,184 @@
+"""repro-lint engine: findings, waivers, baseline, and the file runner.
+
+A *finding* is one rule violation at one source line.  Findings can be
+silenced two ways:
+
+  * an inline waiver comment on the flagged line (or on its own line
+    directly above), carrying a mandatory reason::
+
+        x = int(total)  # repro-lint: disable=host-sync-under-trace -- static shape
+
+  * a baseline file (``--baseline tools/analysis/baseline.json``)
+    holding fingerprints of known findings that predate the pass.
+    The shipped baseline is empty — the codebase is clean — but the
+    mechanism lets a future rule land before its sweep does.
+
+Fingerprints hash (rule, path, normalized line text, occurrence index)
+rather than line numbers, so unrelated edits above a baselined finding
+don't resurrect it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from tools.analysis.context import ModuleContext
+
+WAIVER_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=(?P<rules>[\w\-,*]+)"
+    r"(?:\s*--\s*(?P<reason>\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative, posix separators
+    line: int
+    col: int
+    message: str
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}"
+
+    def render(self) -> str:
+        return f"{self.location()}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    line: int  # the line the waiver *applies to* (not necessarily its own)
+    rules: Set[str]
+    reason: Optional[str]
+    comment_line: int
+    used: bool = False
+
+    def covers(self, finding: Finding) -> bool:
+        return finding.line == self.line and (
+            "*" in self.rules or finding.rule in self.rules
+        )
+
+
+@dataclasses.dataclass
+class FileReport:
+    path: str
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    waived: List[Tuple[Finding, str]] = dataclasses.field(default_factory=list)
+    errors: List[Finding] = dataclasses.field(default_factory=list)
+
+
+def _is_code_line(text: str) -> bool:
+    stripped = text.strip()
+    return bool(stripped) and not stripped.startswith("#")
+
+
+def parse_waivers(lines: Sequence[str], path: str) -> Tuple[List[Waiver],
+                                                            List[Finding]]:
+    """Extract waivers; malformed ones (no ``-- reason``) become errors
+    so a waiver can never silently silence without justification."""
+    waivers: List[Waiver] = []
+    errors: List[Finding] = []
+    for i, text in enumerate(lines, start=1):
+        m = WAIVER_RE.search(text)
+        if not m:
+            if "repro-lint" in text and "disable" in text:
+                errors.append(Finding(
+                    "waiver-syntax", path, i, 0,
+                    "unparseable repro-lint comment (expected "
+                    "`# repro-lint: disable=<rule> -- reason`)"))
+            continue
+        rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+        reason = m.group("reason")
+        if not reason:
+            errors.append(Finding(
+                "waiver-missing-reason", path, i, 0,
+                f"waiver for {','.join(sorted(rules))} has no `-- reason`"))
+            continue
+        target = i
+        if not _is_code_line(text[: m.start()]):
+            # standalone comment: applies to the next code line
+            j = i + 1
+            while j <= len(lines) and not _is_code_line(lines[j - 1]):
+                j += 1
+            target = j
+        waivers.append(Waiver(target, rules, reason.strip(), i))
+    return waivers, errors
+
+
+def fingerprint(finding: Finding, line_text: str, occurrence: int) -> str:
+    payload = "\x00".join([
+        finding.rule, finding.path, " ".join(line_text.split()),
+        str(occurrence),
+    ])
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+def fingerprints_for(findings: Sequence[Finding],
+                     lines_by_path: Dict[str, Sequence[str]]) -> List[str]:
+    seen: Dict[Tuple[str, str, str], int] = {}
+    out = []
+    for f in findings:
+        lines = lines_by_path.get(f.path, [])
+        text = lines[f.line - 1] if 0 < f.line <= len(lines) else ""
+        key = (f.rule, f.path, " ".join(text.split()))
+        occ = seen.get(key, 0)
+        seen[key] = occ + 1
+        out.append(fingerprint(f, text, occ))
+    return out
+
+
+def load_baseline(path: str) -> Set[str]:
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return set(data.get("fingerprints", []))
+
+
+def write_baseline(path: str, fps: Iterable[str]) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "fingerprints": sorted(fps)}, fh, indent=2)
+        fh.write("\n")
+
+
+def analyze_source(source: str, relpath: str, rules,
+                   path: Optional[str] = None) -> FileReport:
+    """Run every rule over one module's source; apply inline waivers."""
+    report = FileReport(relpath)
+    try:
+        ctx = ModuleContext(path or relpath, relpath, source)
+    except SyntaxError as e:
+        report.errors.append(Finding(
+            "parse-error", relpath, e.lineno or 1, 0, str(e.msg)))
+        return report
+
+    waivers, waiver_errors = parse_waivers(ctx.lines, relpath)
+    report.errors.extend(waiver_errors)
+
+    raw: List[Finding] = []
+    for rule in rules:
+        raw.extend(rule.check(ctx))
+    raw.sort(key=lambda f: (f.line, f.col, f.rule))
+
+    for f in raw:
+        waiver = next((w for w in waivers if w.covers(f)), None)
+        if waiver is not None:
+            waiver.used = True
+            report.waived.append((f, waiver.reason or ""))
+        else:
+            report.findings.append(f)
+
+    for w in waivers:
+        if not w.used:
+            report.errors.append(Finding(
+                "waiver-unused", relpath, w.comment_line, 0,
+                f"waiver for {','.join(sorted(w.rules))} matches no finding "
+                "(stale waiver — remove it)"))
+    return report
+
+
+def analyze_file(path: str, relpath: str, rules) -> FileReport:
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    return analyze_source(source, relpath, rules, path=path)

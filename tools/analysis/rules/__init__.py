@@ -1,0 +1,28 @@
+"""Rule registry for repro-lint.
+
+A rule is a module exposing ``NAME`` (the waiver id), ``DOC`` (one-line
+catalog entry), and ``check(ctx: ModuleContext) -> Iterator[Finding]``.
+Add a new rule by writing the module and listing it here; the CLI,
+waiver syntax, baseline, and ``--explain`` pick it up automatically.
+"""
+from __future__ import annotations
+
+from tools.analysis.rules import (
+    actor_locks,
+    axis_names,
+    host_sync,
+    int_width,
+    rng_reuse,
+    trace_cache,
+)
+
+ALL_RULES = (
+    trace_cache,
+    host_sync,
+    rng_reuse,
+    axis_names,
+    int_width,
+    actor_locks,
+)
+
+RULES_BY_NAME = {r.NAME: r for r in ALL_RULES}

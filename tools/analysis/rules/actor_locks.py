@@ -1,0 +1,114 @@
+"""off-lock-actor-state: actor attributes mutated outside the lock.
+
+Classes that create a ``threading.Lock``/``RLock`` in ``__init__`` are
+actor-style: their state is shared with beacon/monitor/checkpoint
+threads.  Every write to ``self.*`` (assignment, augmented assignment,
+``del``, or an in-place mutator call like ``.append``/``.update``)
+outside a ``with self._lock:`` block in such a class is a data race
+candidate.  ``__init__`` itself is exempt (no concurrency before the
+constructor returns), as are reads and non-mutating calls
+(``queue.put`` is internally synchronized and not in the mutator set).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set
+
+from tools.analysis.context import ModuleContext
+from tools.analysis.core import Finding
+
+NAME = "off-lock-actor-state"
+DOC = ("writes to self.* in a lock-owning (actor) class outside "
+       "`with self._lock`")
+
+LOCK_FACTORIES = {"threading.Lock", "threading.RLock", "threading.Condition"}
+MUTATORS = {"append", "appendleft", "add", "discard", "remove", "pop",
+            "popleft", "clear", "extend", "update", "insert", "setdefault"}
+
+
+def _lock_attrs(cls: ast.ClassDef, ctx: ModuleContext) -> Set[str]:
+    attrs: Set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (isinstance(node.value, ast.Call)
+                and ctx.call_qualname(node.value) in LOCK_FACTORIES):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and \
+                    isinstance(t.value, ast.Name) and t.value.id == "self":
+                attrs.add(t.attr)
+    return attrs
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """`self.x` -> 'x'; also the root of `self.x.y[i]` chains."""
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            return node.attr
+        node = node.value
+    return None
+
+
+def _under_lock(ctx: ModuleContext, node: ast.AST, locks: Set[str]) -> bool:
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                expr = item.context_expr
+                if isinstance(expr, ast.Call):
+                    expr = expr.func
+                attr = _self_attr(expr)
+                if attr in locks:
+                    return True
+    return False
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    classes: List[ast.ClassDef] = [
+        n for n in ast.walk(ctx.tree) if isinstance(n, ast.ClassDef)
+    ]
+    for cls in classes:
+        locks = _lock_attrs(cls, ctx)
+        if not locks:
+            continue
+        for fn in cls.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name == "__init__":
+                continue
+            for node in ast.walk(fn):
+                attr = None
+                verb = None
+                where: Optional[ast.AST] = None
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        a = _self_attr(t)
+                        if a is not None and a not in locks:
+                            attr, verb, where = a, "assigned", t
+                            break
+                elif isinstance(node, ast.Delete):
+                    for t in node.targets:
+                        a = _self_attr(t)
+                        if a is not None:
+                            attr, verb, where = a, "deleted", t
+                            break
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in MUTATORS:
+                    a = _self_attr(node.func.value)
+                    if a is not None:
+                        attr, verb, where = a, f"mutated (.{node.func.attr})"\
+                            , node
+                if attr is None or where is None:
+                    continue
+                if _under_lock(ctx, where, locks):
+                    continue
+                lock_name = sorted(locks)[0]
+                yield Finding(
+                    NAME, ctx.relpath, where.lineno, where.col_offset,
+                    f"`self.{attr}` {verb} in `{cls.name}.{fn.name}` "
+                    f"outside `with self.{lock_name}` — this class shares "
+                    "state with other threads")

@@ -1,0 +1,89 @@
+"""axis-name-consistency: collective axis names must be declared.
+
+``jax.lax.psum(x, "pdo")`` inside a shard_map over axis ``"pod"`` fails
+only at run time, and only on a multi-device mesh — exactly the config
+CI exercises least.  This rule checks every string-literal axis name
+passed to a collective against the axis names this repo declares:
+
+  * the canonical mesh axes from ``repro.dist.meshctx``
+    (``pod``/``data``/``model`` — mirrored in DEFAULT_AXES below), and
+  * any axis-name string literals appearing in the same module in a
+    ``Mesh``/``make_mesh``/``shard_map``/``manual_axes`` call.
+
+Dynamically computed axis names (a variable) are not checked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from tools.analysis.context import ModuleContext
+from tools.analysis.core import Finding
+
+NAME = "axis-name-consistency"
+DOC = ("psum/pmean/... axis names must match a mesh/shard_map axis "
+       "declaration (pod/data/model or module-local)")
+
+# keep in sync with repro.dist.meshctx.default_mesh()
+DEFAULT_AXES = frozenset({"pod", "data", "model"})
+
+DECLARING_CALLS = {"Mesh", "make_mesh", "shard_map", "manual_axes",
+                   "default_mesh", "mesh_context"}
+
+COLLECTIVES = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "psum_scatter": 1,
+    "all_gather": 1, "ppermute": 1, "axis_index": 0, "axis_size": 0,
+    "all_to_all": 1,
+}
+
+
+def _declared_axes(ctx: ModuleContext) -> Set[str]:
+    axes: Set[str] = set(DEFAULT_AXES)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = ctx.call_qualname(node)
+        if not q or q.split(".")[-1] not in DECLARING_CALLS:
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                axes.add(sub.value)
+    return axes
+
+
+def _axis_literals(arg: ast.AST):
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        yield arg, arg.value
+    elif isinstance(arg, (ast.Tuple, ast.List)):
+        for elt in arg.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                yield elt, elt.value
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    allowed = _declared_axes(ctx)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = ctx.call_qualname(node)
+        if not q or not (q.startswith("jax.lax.") or q.startswith("lax.")):
+            continue
+        op = q.split(".")[-1]
+        if op not in COLLECTIVES:
+            continue
+        pos = COLLECTIVES[op]
+        axis_arg = None
+        if len(node.args) > pos:
+            axis_arg = node.args[pos]
+        for kw in node.keywords:
+            if kw.arg in ("axis_name", "axis"):
+                axis_arg = kw.value
+        if axis_arg is None:
+            continue
+        for lit, value in _axis_literals(axis_arg):
+            if value not in allowed:
+                yield Finding(
+                    NAME, ctx.relpath, lit.lineno, lit.col_offset,
+                    f"collective `{op}` over axis {value!r}, which no "
+                    "mesh/shard_map in scope declares (known axes: "
+                    f"{', '.join(sorted(allowed))})")

@@ -1,0 +1,78 @@
+"""host-sync-under-trace: device->host sync on jnp values.
+
+Two modes:
+
+  * **under trace** (any module): ``int()/float()/bool()``,
+    ``np.asarray()/np.array()``, ``.item()``, ``.tolist()`` applied to a
+    jax-rooted expression inside a traced function.  Under ``jit`` these
+    either raise ConcretizationTypeError at trace time or — worse, the
+    PR-1 variant — silently bake a traced shape product into a constant.
+  * **driver hot path** (``runtime/`` and ``serve/`` modules only): the
+    same sync calls on jax-rooted values in *untraced* code.  Each one
+    is a blocking device round-trip per round/step; the actor loop and
+    serve engine are latency-critical, so syncs there must be batched
+    into a single transfer or moved to numpy.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.analysis.context import ModuleContext, _walk_no_nested_functions
+from tools.analysis.core import Finding
+
+NAME = "host-sync-under-trace"
+DOC = ("int()/float()/bool()/np.asarray() on jnp values inside traced "
+       "functions, or per-step device syncs in runtime//serve/ drivers")
+
+BUILTIN_CASTS = {"int", "float", "bool"}
+NP_SYNC = {"numpy.asarray", "numpy.array"}
+SYNC_METHODS = {"item", "tolist"}
+HOT_SEGMENTS = ("/runtime/", "/serve/")
+
+
+def _np_rooted(ctx: ModuleContext, node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        q = ctx.qualname(n) if isinstance(n, (ast.Name, ast.Attribute)) else None
+        if q and (q == "numpy" or q.startswith("numpy.")):
+            return True
+    return False
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    hot_module = any(seg in "/" + ctx.relpath for seg in HOT_SEGMENTS)
+    for fn in ctx.functions:
+        traced = ctx.is_traced(fn)
+        hot = hot_module and not traced and fn.name != "__init__"
+        if not (traced or hot):
+            continue
+        where = ("under trace" if traced
+                 else "in a runtime hot path (one device sync per call)")
+        local_jax = ctx.jax_local_names(fn)
+        for node in _walk_no_nested_functions(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            q = ctx.call_qualname(node)
+            arg = node.args[0] if node.args else None
+
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in BUILTIN_CASTS
+                    and node.func.id not in ctx.aliases
+                    and arg is not None
+                    and ctx.is_jax_rooted(arg, local_jax)):
+                yield Finding(
+                    NAME, ctx.relpath, node.lineno, node.col_offset,
+                    f"`{node.func.id}()` on a jax value {where}")
+            elif (q in NP_SYNC and arg is not None
+                    and ctx.is_jax_rooted(arg, local_jax)
+                    and not _np_rooted(ctx, arg)):
+                yield Finding(
+                    NAME, ctx.relpath, node.lineno, node.col_offset,
+                    f"`{q.replace('numpy', 'np')}()` on a jax value {where}")
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in SYNC_METHODS
+                    and not node.args
+                    and ctx.is_jax_rooted(node.func.value, local_jax)):
+                yield Finding(
+                    NAME, ctx.relpath, node.lineno, node.col_offset,
+                    f"`.{node.func.attr}()` on a jax value {where}")

@@ -1,0 +1,110 @@
+"""int-width-discipline: packed-field integer math stays in PackGeometry.
+
+The wire format packs biased b-bit fields into int32 words; the whole
+correctness argument (carry-freeness under an n-client psum, exact
+float32 decode) lives in ``core/packing.py`` and the kernels that
+consume a ``PackGeometry``.  Ad-hoc shifts on array data, or summing a
+message that was narrowed with ``.astype`` outside a geometry-aware
+function, are exactly how a silent inter-lane carry gets reintroduced.
+
+Allowed zones: ``kernels/``, ``core/packing.py``, ``core/coding.py``,
+and any function that references a geometry object (``geom``,
+``PackGeometry``, ``geometry_for_*``) — those own the invariant.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.analysis.context import ModuleContext, _walk_no_nested_functions
+from tools.analysis.core import Finding
+
+NAME = "int-width-discipline"
+DOC = ("bit-shifts on array data or psum over a narrowed integer dtype "
+       "outside PackGeometry-aware code")
+
+ALLOWED_PATH_PARTS = ("kernels/",)
+ALLOWED_PATH_SUFFIXES = ("core/packing.py", "core/coding.py")
+
+PSUM_OPS = {"jax.lax.psum", "jax.lax.pmean", "jax.lax.psum_scatter"}
+SHIFT_CALLS = {"jax.numpy.left_shift", "jax.numpy.right_shift"}
+
+
+def _path_allowed(relpath: str) -> bool:
+    return any(p in relpath for p in ALLOWED_PATH_PARTS) or \
+        relpath.endswith(ALLOWED_PATH_SUFFIXES)
+
+
+def _geometry_aware(fn) -> bool:
+    for node in ast.walk(fn):
+        text = None
+        if isinstance(node, ast.Name):
+            text = node.id
+        elif isinstance(node, ast.Attribute):
+            text = node.attr
+        elif isinstance(node, ast.arg):
+            text = node.arg
+        if text and ("geom" in text.lower() or text == "PackGeometry"):
+            return True
+    return False
+
+
+def _astype_is_narrow_int(node: ast.Call) -> bool:
+    """True unless the .astype target is clearly a float dtype."""
+    if not node.args:
+        return False
+    arg = node.args[0]
+    text = ast.dump(arg)
+    if "float" in text or "bool" in text:
+        return False
+    return True
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    if _path_allowed(ctx.relpath):
+        return
+    for fn in ctx.functions:
+        if _geometry_aware(fn):
+            continue
+        local_jax = ctx.jax_local_names(fn)
+        narrowed = {}  # name -> lineno of the narrowing .astype
+        nodes = sorted(
+            _walk_no_nested_functions(fn),
+            key=lambda n: (getattr(n, "lineno", 0),
+                           getattr(n, "col_offset", 0)))
+        for node in nodes:
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, (ast.LShift, ast.RShift)):
+                if ctx.is_jax_rooted(node.left, local_jax) or \
+                        ctx.is_jax_rooted(node.right, local_jax):
+                    yield Finding(
+                        NAME, ctx.relpath, node.lineno, node.col_offset,
+                        "manual bit-shift on array data outside a "
+                        "PackGeometry-aware function — packed-field "
+                        "layout must come from core/packing.py")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            q = ctx.call_qualname(node)
+            if q in SHIFT_CALLS:
+                yield Finding(
+                    NAME, ctx.relpath, node.lineno, node.col_offset,
+                    f"`{q}` outside a PackGeometry-aware function — "
+                    "packed-field layout must come from core/packing.py")
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "astype" and \
+                    _astype_is_narrow_int(node):
+                parent = ctx.parents.get(node)
+                if isinstance(parent, ast.Assign):
+                    for t in parent.targets:
+                        if isinstance(t, ast.Name):
+                            narrowed[t.id] = node.lineno
+            if q in PSUM_OPS and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Name) and \
+                        narrowed.get(arg.id, 10**9) <= node.lineno:
+                    yield Finding(
+                        NAME, ctx.relpath, node.lineno, node.col_offset,
+                        f"psum over `{arg.id}`, narrowed with .astype in "
+                        "a function that never consults the PackGeometry "
+                        "— an n-client sum can wrap the narrow dtype")

@@ -1,0 +1,266 @@
+"""rng-key-reuse: a PRNG key consumed twice without split/fold_in.
+
+Seeded-dither recompute (the paper's shared-randomness trick) only
+works because client i and the server derive the *same* sample from the
+same key — which requires every key to reach exactly one sampler.  A
+key passed to two consumers, or consumed inside a loop without a
+per-iteration ``fold_in``, correlates draws that the exact-error
+analysis assumes independent.
+
+The rule tracks local names bound from key-producing calls
+(``PRNGKey``/``split``/``fold_in``/``*round_key``/…) plus parameters
+named ``key``/``*_key``, and counts *consumptions* — the key appearing
+as a direct argument to any call that is not itself a ``split`` or
+``fold_in``.  Counting is path-aware: exclusive ``if/else`` branches
+each get their own count (the max merges), and loop/comprehension
+bodies are counted twice so a single consumption per iteration of an
+outer key still fires.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, Iterator, List, Optional, Set
+
+from tools.analysis.context import ModuleContext
+from tools.analysis.core import Finding
+
+NAME = "rng-key-reuse"
+DOC = ("a PRNG key reaches two consumers (or a loop body) without an "
+       "intervening split/fold_in")
+
+PRODUCER_SUFFIXES = {"PRNGKey", "key", "split", "fold_in", "wrap_key_data",
+                     "round_key", "client_dither_key"}
+DERIVER_SUFFIXES = {"split", "fold_in"}
+KEY_PARAM_NAMES = ("key",)
+
+
+def _last_segment(ctx: ModuleContext, func: ast.AST) -> Optional[str]:
+    q = ctx.qualname(func)
+    if q:
+        return q.split(".")[-1]
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _is_producer_call(ctx: ModuleContext, node: ast.AST) -> bool:
+    if isinstance(node, ast.Subscript):
+        return _is_producer_call(ctx, node.value)
+    if isinstance(node, ast.Call):
+        seg = _last_segment(ctx, node.func)
+        return seg in PRODUCER_SUFFIXES
+    return False
+
+
+def _is_split_call(ctx: ModuleContext, node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and _last_segment(ctx, node.func) == "split")
+
+
+@dataclasses.dataclass
+class _State:
+    keys: Set[str]
+    counts: Dict[str, int]
+
+    def copy(self) -> "_State":
+        return _State(set(self.keys), dict(self.counts))
+
+    def merge_max(self, other: "_State") -> None:
+        self.keys |= other.keys
+        for k, v in other.counts.items():
+            self.counts[k] = max(self.counts.get(k, 0), v)
+
+
+class _FunctionChecker:
+    def __init__(self, ctx: ModuleContext, fn) -> None:
+        self.ctx = ctx
+        self.fn = fn
+        self.findings: List[Finding] = []
+        self.reported: Set[str] = set()
+
+    def run(self) -> List[Finding]:
+        state = _State(set(), {})
+        args = self.fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if a.arg in KEY_PARAM_NAMES or a.arg.endswith("_key"):
+                state.keys.add(a.arg)
+                state.counts[a.arg] = 0
+        self._block(self.fn.body, state)
+        return self.findings
+
+    # ------------------------------------------------------ statements
+
+    def _block(self, stmts, state: _State) -> bool:
+        """Process statements; True if the block always terminates
+        (return/raise/break/continue) before falling through."""
+        for stmt in stmts:
+            if self._stmt(stmt, state):
+                return True
+        return False
+
+    def _stmt(self, stmt, state: _State) -> bool:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return False  # separate scope; checked on its own
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._expr(stmt.value, state, frozenset(), 1)
+            return True
+        if isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self._expr(stmt.exc, state, frozenset(), 1)
+            return True
+        if isinstance(stmt, (ast.Break, ast.Continue)):
+            return True
+        if isinstance(stmt, ast.If):
+            self._expr(stmt.test, state, frozenset(), 1)
+            s_then, s_else = state.copy(), state.copy()
+            t_then = self._block(stmt.body, s_then)
+            t_else = self._block(stmt.orelse, s_else)
+            if t_then and t_else:
+                return True
+            if t_then:
+                state.keys, state.counts = s_else.keys, s_else.counts
+            elif t_else:
+                state.keys, state.counts = s_then.keys, s_then.counts
+            else:
+                s_then.merge_max(s_else)
+                state.keys, state.counts = s_then.keys, s_then.counts
+            return False
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            if isinstance(stmt, ast.While):
+                self._expr(stmt.test, state, frozenset(), 1)
+            else:
+                self._expr(stmt.iter, state, frozenset(), 1)
+                self._clear_targets(stmt.target, state)
+            # two passes over the body: a key consumed once per
+            # iteration shows up as a double consumption
+            for _ in range(2):
+                self._block(stmt.body, state)
+            self._block(stmt.orelse, state)
+            return False
+        if isinstance(stmt, ast.Try):
+            self._block(stmt.body, state)
+            for handler in stmt.handlers:
+                s_h = state.copy()
+                self._block(handler.body, s_h)
+                state.merge_max(s_h)
+            self._block(stmt.orelse, state)
+            self._block(stmt.finalbody, state)
+            return False
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr, state, frozenset(), 1)
+            return self._block(stmt.body, state)
+        if isinstance(stmt, ast.Assign):
+            self._expr(stmt.value, state, frozenset(), 1)
+            self._bind(stmt.targets, stmt.value, state)
+            return False
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._expr(stmt.value, state, frozenset(), 1)
+                self._bind([stmt.target], stmt.value, state)
+            return False
+        if isinstance(stmt, ast.AugAssign):
+            self._expr(stmt.value, state, frozenset(), 1)
+            return False
+        if isinstance(stmt, ast.Expr):
+            self._expr(stmt.value, state, frozenset(), 1)
+            return False
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._expr(child, state, frozenset(), 1)
+        return False
+
+    # ----------------------------------------------------- expressions
+
+    def _expr(self, node: ast.AST, state: _State,
+              shadowed: FrozenSet[str], mult: int) -> None:
+        if isinstance(node, ast.Lambda):
+            params = frozenset(
+                a.arg for a in (node.args.posonlyargs + node.args.args
+                                + node.args.kwonlyargs))
+            self._expr(node.body, state, shadowed | params, mult)
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            bound: Set[str] = set()
+            for gen in node.generators:
+                self._expr(gen.iter, state, shadowed | frozenset(bound), mult)
+                for leaf in ast.walk(gen.target):
+                    if isinstance(leaf, ast.Name):
+                        bound.add(leaf.id)
+                for cond in gen.ifs:
+                    self._expr(cond, state, shadowed | frozenset(bound),
+                               mult * 2)
+            inner = shadowed | frozenset(bound)
+            if isinstance(node, ast.DictComp):
+                self._expr(node.key, state, inner, mult * 2)
+                self._expr(node.value, state, inner, mult * 2)
+            else:
+                self._expr(node.elt, state, inner, mult * 2)
+            return
+        if isinstance(node, ast.Call):
+            seg = _last_segment(self.ctx, node.func)
+            deriver = seg in DERIVER_SUFFIXES
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                name = self._key_arg_name(arg, state, shadowed)
+                if name is not None and not deriver:
+                    self._consume(name, state, node, mult)
+                self._expr(arg, state, shadowed, mult)
+            self._expr(node.func, state, shadowed, mult)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.expr, ast.comprehension, ast.keyword)):
+                self._expr(child, state, shadowed, mult)
+
+    def _key_arg_name(self, arg: ast.AST, state: _State,
+                      shadowed: FrozenSet[str]) -> Optional[str]:
+        node = arg.value if isinstance(arg, ast.Subscript) else arg
+        if isinstance(node, ast.Name) and node.id in state.keys \
+                and node.id not in shadowed:
+            return node.id
+        return None
+
+    def _consume(self, name: str, state: _State, at: ast.AST,
+                 mult: int) -> None:
+        state.counts[name] = state.counts.get(name, 0) + mult
+        if state.counts[name] >= 2 and name not in self.reported:
+            self.reported.add(name)
+            self.findings.append(Finding(
+                NAME, self.ctx.relpath, at.lineno, at.col_offset,
+                f"PRNG key `{name}` reaches more than one consumer on this "
+                "path without split/fold_in — correlated draws break the "
+                "seeded-dither recompute"))
+
+    # -------------------------------------------------------- binding
+
+    def _clear_targets(self, target: ast.AST, state: _State) -> None:
+        for leaf in ast.walk(target):
+            if isinstance(leaf, ast.Name):
+                state.keys.discard(leaf.id)
+                state.counts.pop(leaf.id, None)
+
+    def _bind(self, targets, value: ast.AST, state: _State) -> None:
+        producer = _is_producer_call(self.ctx, value)
+        for target in targets:
+            if isinstance(target, ast.Name):
+                if producer:
+                    state.keys.add(target.id)
+                    state.counts[target.id] = 0
+                else:
+                    self._clear_targets(target, state)
+            elif isinstance(target, (ast.Tuple, ast.List)):
+                if _is_split_call(self.ctx, value):
+                    for elt in target.elts:
+                        if isinstance(elt, ast.Name):
+                            state.keys.add(elt.id)
+                            state.counts[elt.id] = 0
+                else:
+                    self._clear_targets(target, state)
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    for fn in ctx.functions:
+        yield from _FunctionChecker(ctx, fn).run()

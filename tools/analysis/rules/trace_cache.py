@@ -1,0 +1,47 @@
+"""trace-cache: lru_cache on functions that touch jax.
+
+``functools.lru_cache``/``cache`` on a function that is reachable from
+traced code, takes array arguments, or whose body references jax is the
+PR-1 bug class: the first trace populates the table with a Tracer (or a
+device array from a retired trace), and every later call replays a
+stale value with the wrong avals.  Caching is fine when the key space
+is hashable Python data and the cached value is an opaque callable —
+that exact pattern (codec factories keyed on ``(proto, n, d)``) is what
+the waiver syntax is for.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.analysis.context import ModuleContext
+from tools.analysis.core import Finding
+
+NAME = "trace-cache"
+DOC = ("functools.lru_cache/cache on a function reachable from jitted "
+       "code or whose body references jax")
+
+CACHE_QUALS = {"functools.lru_cache", "functools.cache"}
+
+
+def check(ctx: ModuleContext) -> Iterator[Finding]:
+    for fn in ctx.functions:
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            q = ctx.qualname(target)
+            if q not in CACHE_QUALS:
+                continue
+            cache_name = q.split(".")[-1]
+            if ctx.is_traced(fn):
+                yield Finding(
+                    NAME, ctx.relpath, dec.lineno, dec.col_offset,
+                    f"`{cache_name}` on `{fn.name}`, which is reachable "
+                    "from traced/jitted code — the cache can capture a "
+                    "Tracer on first trace and replay it with stale avals")
+            elif ctx.expr_mentions_jax(fn):
+                yield Finding(
+                    NAME, ctx.relpath, dec.lineno, dec.col_offset,
+                    f"`{cache_name}` on `{fn.name}`, whose body references "
+                    "jax — cached entries may pin device arrays or jitted "
+                    "state across reconfigurations; key must be hashable "
+                    "host data only")
